@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, CSV output, standard network builder."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, value: float, unit: str, derived: str = "") -> None:
+    row = f"{name},{value:.6g},{unit},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def build_bcpnn(layout_in, n_hcu=16, n_mcu=16, n_classes=10, lam=0.02,
+                fan_in=32, use_kernels=False, precision=None, gain=4.0,
+                seed=0):
+    from repro.core import (
+        DenseLayer, Network, StructuralPlasticityLayer, UnitLayout,
+        onehot_layout,
+    )
+
+    hidden = UnitLayout(n_hcu, n_mcu)
+    net = Network(seed=seed)
+    net.add(StructuralPlasticityLayer(
+        layout_in, hidden, fan_in=min(fan_in, layout_in.n_hcu), lam=lam,
+        init_jitter=1.0, gain=gain, use_kernels=use_kernels,
+        precision=precision,
+    ))
+    net.add(DenseLayer(hidden, onehot_layout(n_classes), lam=lam,
+                       precision=precision))
+    return net

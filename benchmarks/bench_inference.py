@@ -1,0 +1,38 @@
+"""Paper Fig. 2b: inference throughput vs batch size, including the
+single-image "streaming" row (28k-87k img/s on the paper's hardware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_common import build_bcpnn, emit, time_fn
+from repro.data import complementary_code, mnist_like
+
+
+def main():
+    ds = mnist_like(n_train=2048, n_test=2048, n_features=256, seed=0)
+    x, layout = complementary_code(ds.x_test)
+    net = build_bcpnn(layout).build()
+    layer, state = net.layers[0], net.states[0]
+    fwd = jax.jit(layer.forward)
+    for bs in (1, 16, 64, 256, 1024):
+        xb = jnp.asarray(x[:bs])
+        t = time_fn(fwd, state, xb, iters=5)
+        emit(f"fig2b_infer_bs{bs}", bs / t, "images/s", f"step_s={t:.4g}")
+
+    # streaming mode: per-sample latency through the coalescing session
+    from repro.core.streaming import StreamingSession
+    import time as _t
+
+    sess = StreamingSession(layer, state, max_batch=1)
+    sess.infer(x[0])  # warm the cell
+    t0 = _t.perf_counter()
+    n = 200
+    for i in range(n):
+        sess.infer(x[i % 1024])
+    dt = _t.perf_counter() - t0
+    emit("fig2b_streaming_single", n / dt, "images/s", "latency-path")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks (beyond-paper): Pallas interpret-mode correctness
+cost + the jnp reference path timings at paper-scale shapes, plus analytic
+TPU roofline projections for the fused bcpnn_update kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_common import emit, time_fn
+from repro.core import UnitLayout, init_marginals
+from repro.kernels import ref
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def main():
+    # Paper MNIST scale: N_F=1568 (complementary 784), N_H=3000, B=256.
+    b, f, h = 256, 1568, 3000
+    rng = np.random.default_rng(0)
+    ai = jnp.asarray(rng.random((b, f)), jnp.float32)
+    aj = jnp.asarray(rng.random((b, h)), jnp.float32)
+    marg = init_marginals(f, h, key=jax.random.PRNGKey(0), jitter=0.5)
+
+    fused = jax.jit(
+        lambda m, x, y: ref.bcpnn_update(x, y, m.ci, m.cj, m.cij, 0.01)
+    )
+    t = time_fn(fused, marg, ai, aj)
+    flops = 2.0 * b * f * h + 8.0 * f * h  # outer product + EWMA/log epilogue
+    emit("kernel_bcpnn_update_cpu_ref", flops / t / 1e9, "GFLOP/s", f"t={t:.4g}s")
+
+    # Analytic TPU projection for the fused kernel (per step, one chip):
+    hbm_bytes = (f * h * 4) * 3 + (b * (f + h) * 4)  # cij r/w + w write + acts
+    t_mem = hbm_bytes / HBM_BW
+    t_cmp = flops / PEAK_FLOPS_BF16
+    emit("kernel_bcpnn_update_tpu_mem_bound_s", t_mem, "s",
+         "fused: 3x f*h HBM moves")
+    emit("kernel_bcpnn_update_tpu_cmp_bound_s", t_cmp, "s")
+    unfused = hbm_bytes + 2 * (f * h * 4)  # extra cij round-trip when unfused
+    emit("kernel_fusion_saving", unfused / hbm_bytes, "x HBM traffic",
+         "FPGA-style fusion benefit")
+
+
+if __name__ == "__main__":
+    main()

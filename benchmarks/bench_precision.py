@@ -1,0 +1,31 @@
+"""Paper Fig. 3: accuracy vs numerical format (BF14..BF28 vs f32).
+
+The FPGA study's TPU-native reproduction: the full BCPNN datapath is rounded
+to each format at every stage boundary (repro.precision).  Expected shape of
+the curve (paper): BF20+ == f32, BF16 ~ -4%, BF15 partial, BF14 -> chance.
+"""
+from __future__ import annotations
+
+from benchmarks.bench_common import build_bcpnn, emit
+from repro.data import complementary_code, mnist_like
+from repro.precision import PrecisionPolicy
+
+
+def main():
+    ds = mnist_like(n_train=2048, n_test=512, n_features=64, seed=0)
+    x_tr, layout = complementary_code(ds.x_train)
+    x_te, _ = complementary_code(ds.x_test)
+
+    for fmt in ("fp32", "bf28", "bf24", "bf20", "bf16", "bf15", "bf14"):
+        pol = None if fmt == "fp32" else PrecisionPolicy.named(fmt)
+        net = build_bcpnn(layout, precision=pol)
+        net.fit(
+            (x_tr, ds.y_train), epochs_hidden=4, epochs_readout=4,
+            batch_size=128,
+        )
+        acc = net.evaluate((x_te, ds.y_test))
+        emit(f"fig3_precision_{fmt}", acc, "accuracy")
+
+
+if __name__ == "__main__":
+    main()

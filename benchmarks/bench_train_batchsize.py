@@ -1,0 +1,37 @@
+"""Paper Fig. 2a: training throughput vs batch size (BLAS2 -> BLAS3 effect).
+
+Measures images/second of the jitted BCPNN train step across batch sizes on
+the MNIST-shaped proxy, for both the pure-jnp reference path and the Pallas
+kernel path (interpret mode on CPU — the kernel numbers here validate
+plumbing, not TPU speed; the TPU projection lives in the roofline analysis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_common import build_bcpnn, emit, time_fn
+from repro.data import complementary_code, mnist_like
+
+
+def run(batch_sizes=(16, 64, 256, 1024), n_features=256, use_kernels=False):
+    ds = mnist_like(n_train=4096, n_test=64, n_features=n_features, seed=0)
+    x, layout = complementary_code(ds.x_train)
+    net = build_bcpnn(layout, use_kernels=use_kernels).build()
+    layer = net.layers[0]
+    tag = "kernel" if use_kernels else "ref"
+    for bs in batch_sizes:
+        xb = jnp.asarray(x[:bs])
+        step = jax.jit(lambda s, b: layer.train_batch(s, b)[0])
+        t = time_fn(step, net.states[0], xb)
+        emit(f"fig2a_train_{tag}_bs{bs}", bs / t, "images/s", f"step_s={t:.4g}")
+
+
+def main():
+    run(use_kernels=False)
+    run(batch_sizes=(64, 256), use_kernels=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Data-parallel BCPNN training — the paper's MPI backend on a JAX mesh.
+
+    PYTHONPATH=src python examples/distributed_bcpnn.py
+
+Runs on 8 fake host devices (set before jax import), training the same
+network under (a) single device, (b) shard_map with explicit pmean — the
+paper's MPI_Allreduce — and (c) sharding-annotated pjit, and verifies all
+three produce identical weights.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import StructuralPlasticityLayer, UnitLayout  # noqa: E402
+from repro.core.distributed import DataParallelTrainer  # noqa: E402
+from repro.data import complementary_code, mnist_like  # noqa: E402
+
+
+def main():
+    print(f"devices: {len(jax.devices())}")
+    ds = mnist_like(n_train=512, n_test=64, n_features=64, seed=0)
+    x, layout = complementary_code(ds.x_train)
+    xb = jnp.asarray(x[:256])
+
+    hidden = UnitLayout(8, 16)
+    layer = StructuralPlasticityLayer(layout, hidden, fan_in=32, lam=0.05,
+                                      init_jitter=1.0)
+    st0 = layer.init(jax.random.PRNGKey(0))
+
+    # (a) single-device reference
+    st_ref = st0
+    step_ref = jax.jit(lambda s, b: layer.train_batch(s, b)[0])
+    for _ in range(8):
+        st_ref = step_ref(st_ref, xb)
+
+    # (b)+(c) 4-way data x 2-way model mesh
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    for mode in ("shard_map", "pjit"):
+        tr = DataParallelTrainer(mesh, mode=mode)
+        step = tr.hidden_step(layer)
+        st = tr.place_state(layer, st0)
+        xg = jax.device_put(xb, tr.batch_sharding())
+        for _ in range(8):
+            st = step(st, xg)
+        err = float(jnp.max(jnp.abs(jax.device_get(st.w) - st_ref.w)))
+        print(f"{mode:10s}: max |w - w_ref| = {err:.2e} "
+              f"({'OK' if err < 1e-3 else 'MISMATCH'})")
+
+
+if __name__ == "__main__":
+    main()

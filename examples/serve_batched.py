@@ -1,0 +1,57 @@
+"""Batched LM serving: prefill + continuous-batching decode.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch yi-9b --requests 6
+
+Uses the reduced (smoke) config of any assigned architecture, generates
+greedy completions for a queue of prompts through the slot-based serving
+session, and reports per-request shapes + aggregate throughput.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.models import build_model
+from repro.runtime import Request, ServeSession
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=[a for a in ARCH_NAMES], default="yi-9b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    if cfg.family == "encdec":
+        raise SystemExit("serve_batched targets decoder-only archs")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sess = ServeSession(model, params, max_batch=args.max_batch, max_seq=128)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, rng.integers(4, 24)).astype(np.int32),
+            max_new_tokens=args.max_new,
+        )
+        for i in range(args.requests)
+    ]
+    t0 = time.perf_counter()
+    done = sess.generate(reqs)
+    dt = time.perf_counter() - t0
+    total_new = sum(len(c.tokens) for c in done)
+    for c in sorted(done, key=lambda c: c.rid):
+        print(f"req {c.rid}: prefill={c.prefill_len:3d} -> {c.tokens.tolist()}")
+    print(
+        f"\n{len(done)} requests, {total_new} tokens in {dt:.1f}s "
+        f"({total_new/dt:.1f} tok/s on CPU, arch={args.arch})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Streaming mode: samples arrive one at a time (camera/NIC scenario).
+
+    PYTHONPATH=src python examples/streaming_bcpnn.py
+
+Feeds single samples into a StreamingSession (which coalesces bursts into
+micro-batches without changing the EWMA semantics), then runs single-sample
+inference — the paper's latency-oriented operation mode.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core import StructuralPlasticityLayer, UnitLayout
+from repro.core.streaming import StreamingSession
+from repro.data import complementary_code, mnist_like
+
+
+def main():
+    ds = mnist_like(n_train=1024, n_test=64, n_features=64, seed=0)
+    x, layout = complementary_code(ds.x_train)
+
+    hidden = UnitLayout(8, 16)
+    layer = StructuralPlasticityLayer(
+        layout, hidden, fan_in=32, lam=0.05, gain=4.0, init_jitter=1.0
+    )
+    sess = StreamingSession(layer, layer.init(jax.random.PRNGKey(0)),
+                            max_batch=16)
+
+    t0 = time.perf_counter()
+    for row in x[:512]:
+        sess.feed(row)  # flushes every 16 samples
+    sess.flush()
+    dt = time.perf_counter() - t0
+    print(f"streamed 512 training samples in {dt:.2f}s "
+          f"({sess.flushes} micro-batch flushes)")
+
+    t0 = time.perf_counter()
+    n = 100
+    for i in range(n):
+        out = sess.infer(x[i])
+    dt = time.perf_counter() - t0
+    print(f"single-sample inference: {n/dt:.0f} samples/s "
+          f"(paper: 28k-87k img/s on V100/A100)")
+    print(f"activation of sample 0 (first HCU): {np.round(out[:16], 3)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+# Atomic, async, mesh-agnostic checkpointing (restart == elastic scaling).
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    latest_checkpoint,
+    list_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "AsyncCheckpointer", "latest_checkpoint", "list_checkpoints",
+    "restore_checkpoint", "save_checkpoint",
+]

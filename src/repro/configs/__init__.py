@@ -1,0 +1,17 @@
+# Assigned architectures (exact published numbers) + shape grid + smoke
+# variants + input ShapeDtypeStruct specs for the dry-run.
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from repro.configs.registry import (
+    ARCH_NAMES,
+    all_cells,
+    batch_specs,
+    decode_specs,
+    get_config,
+    get_smoke_config,
+)
+
+__all__ = [
+    "SHAPES", "ModelConfig", "ShapeConfig", "shape_applicable",
+    "ARCH_NAMES", "all_cells", "batch_specs", "decode_specs",
+    "get_config", "get_smoke_config",
+]

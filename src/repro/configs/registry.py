@@ -1,0 +1,105 @@
+"""Architecture registry + per-(arch, shape) input specs.
+
+``input_specs(cfg, shape, model)`` returns jax.ShapeDtypeStruct stand-ins
+for every input of the step function the shape's kind lowers:
+
+  train    -> train_step(params, opt_state, batch{tokens, labels, ...})
+  prefill  -> prefill(params, batch{tokens, ...})
+  decode   -> decode_step(params, cache, token, cur_len)
+
+Nothing here allocates device memory — caches/params come from
+``jax.eval_shape``.  The BCPNN configs (the paper's own model) live here too
+so --arch treats them uniformly.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+
+_ARCH_MODULES: Dict[str, str] = {
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b",
+    "mamba2-1.3b": "repro.configs.mamba2_1p3b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "yi-9b": "repro.configs.yi_9b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(_ARCH_MODULES[name])
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(_ARCH_MODULES[name])
+    return mod.smoke()
+
+
+def all_cells():
+    """Every assigned (arch, shape) cell with applicability flags."""
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = shape_applicable(cfg, shape)
+            yield arch, shape.name, ok, why
+
+
+# ------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStructs for the data batch of a train/prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        sd = s // cfg.dec_ratio
+        specs = {
+            "enc_embeds": _sds((b, s, cfg.d_model), jnp.bfloat16),
+            "tokens": _sds((b, sd), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = _sds((b, sd), jnp.int32)
+        return specs
+    if cfg.family == "vlm":
+        p = min(cfg.n_patches, s // 4)
+        st = s - p
+        specs = {
+            "embeds": _sds((b, p, cfg.d_model), jnp.bfloat16),
+            "tokens": _sds((b, st), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = _sds((b, st), jnp.int32)
+        return specs
+    specs = {"tokens": _sds((b, s), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = _sds((b, s), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, model) -> Dict:
+    """ShapeDtypeStructs for decode_step(cache, token, cur_len)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(
+            lambda: model.init_cache(b, s, max(s // cfg.dec_ratio, 1024))
+        )
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {
+        "cache": cache,
+        "token": _sds((b, 1), jnp.int32),
+        "cur_len": _sds((), jnp.int32),
+    }

@@ -1,0 +1,28 @@
+# The paper's primary contribution — the BCPNN model, learning rule,
+# structural plasticity, and the Keras-like DSL — implemented as pure
+# functional JAX plus a thin imperative veneer.
+from repro.core.units import UnitLayout, complementary_layout, onehot_layout
+from repro.core.learning import (
+    EPS,
+    MarginalState,
+    batch_means,
+    forward,
+    hcu_softmax,
+    init_marginals,
+    learning_cycle,
+    update_marginals,
+    weights_from_marginals,
+)
+from repro.core.plasticity import PlasticityState, full_mask, init_random_mask
+from repro.core.layers import BCPNNLayerSpec, DenseLayer, LayerState, StructuralPlasticityLayer
+from repro.core.network import FitResult, Network
+
+__all__ = [
+    "UnitLayout", "complementary_layout", "onehot_layout",
+    "EPS", "MarginalState", "batch_means", "forward", "hcu_softmax",
+    "init_marginals", "learning_cycle", "update_marginals",
+    "weights_from_marginals",
+    "PlasticityState", "full_mask", "init_random_mask",
+    "BCPNNLayerSpec", "DenseLayer", "LayerState", "StructuralPlasticityLayer",
+    "FitResult", "Network",
+]

@@ -1,0 +1,176 @@
+"""BCPNN learning rule: EWMA probability marginals -> weights/biases.
+
+This module is the *reference formulation* of the paper's Algorithm 1 inner
+loop (lines 10-16) in pure jnp.  The Pallas-accelerated path lives in
+``repro.kernels`` and is validated against these functions; the functional
+split mirrors StreamBrain's own structure where ``updateMarginals()`` /
+``updateWeights()`` / ``updateBias()`` are the named hot methods.
+
+All state is carried in a :class:`MarginalState` pytree so the whole update
+is a pure function usable under jit / scan / shard_map.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.units import UnitLayout
+
+# Probability floor: marginals are clamped at EPS before logs, the standard
+# BCPNN regularization (a unit that never fired has probability ~0 and an
+# unbounded negative weight otherwise).
+EPS = 1e-8
+
+
+class MarginalState(NamedTuple):
+    """EWMA marginal estimates between a pre-layer (i) and post-layer (j).
+
+    ci:  (n_pre,)        P(x_i)   estimate
+    cj:  (n_post,)       P(y_j)   estimate
+    cij: (n_pre, n_post) P(x_i, y_j) estimate
+    """
+
+    ci: jnp.ndarray
+    cj: jnp.ndarray
+    cij: jnp.ndarray
+
+    @property
+    def n_pre(self) -> int:
+        return self.ci.shape[0]
+
+    @property
+    def n_post(self) -> int:
+        return self.cj.shape[0]
+
+
+def init_marginals(
+    n_pre: int,
+    n_post: int,
+    pre_layout: Optional[UnitLayout] = None,
+    post_layout: Optional[UnitLayout] = None,
+    dtype: jnp.dtype = jnp.float32,
+    key: Optional[jax.Array] = None,
+    jitter: float = 0.0,
+) -> MarginalState:
+    """Initialize marginals to the uniform-independence prior.
+
+    With L-MCU HCUs a uniform activation is 1/L per unit, and independence
+    gives cij = ci*cj, so weights start at exactly zero.  For *unsupervised*
+    layers that is a fixed point (all MCUs of an HCU receive identical
+    support -> uniform softmax -> EWMA reconverges to independence), so a
+    multiplicative log-normal `jitter` on cij breaks the symmetry: weights
+    start at ~N(0, jitter^2).  The paper relies on the same mechanism ("the
+    different random generators used to initialize the network").
+    Supervised readouts need no jitter (targets break symmetry).
+    """
+    pi = 1.0 / (pre_layout.n_mcu if pre_layout is not None else n_pre)
+    pj = 1.0 / (post_layout.n_mcu if post_layout is not None else n_post)
+    ci = jnp.full((n_pre,), pi, dtype=dtype)
+    cj = jnp.full((n_post,), pj, dtype=dtype)
+    cij = jnp.full((n_pre, n_post), pi * pj, dtype=dtype)
+    if key is not None and jitter > 0.0:
+        eta = jitter * jax.random.normal(key, (n_pre, n_post), dtype)
+        cij = cij * jnp.exp(eta)
+    return MarginalState(ci=ci, cj=cj, cij=cij)
+
+
+def batch_means(ai: jnp.ndarray, aj: jnp.ndarray):
+    """Per-batch mean statistics feeding the EWMA (Alg.1 L11-13 <...> terms).
+
+    Returns (mi, mj, mij) where mij = (ai^T @ aj) / B — the batched outer
+    product that dominates the FLOP cost (the paper's performance model).
+    The matmul accumulates in f32 regardless of input dtype.
+    """
+    b = ai.shape[0]
+    mi = jnp.mean(ai, axis=0)
+    mj = jnp.mean(aj, axis=0)
+    mij = jnp.einsum(
+        "bi,bj->ij", ai, aj, preferred_element_type=jnp.float32
+    ) / jnp.asarray(b, jnp.float32)
+    return mi, mj, mij
+
+
+def update_marginals(
+    state: MarginalState,
+    mi: jnp.ndarray,
+    mj: jnp.ndarray,
+    mij: jnp.ndarray,
+    lam: float,
+) -> MarginalState:
+    """EWMA marginal update (Alg.1 L11-13), given batch means."""
+    one_m = 1.0 - lam
+    return MarginalState(
+        ci=one_m * state.ci + lam * mi,
+        cj=one_m * state.cj + lam * mj,
+        cij=one_m * state.cij + lam * mij,
+    )
+
+
+def weights_from_marginals(state: MarginalState, k_b: float = 1.0):
+    """Bayesian weight/bias computation (Alg.1 L14-15).
+
+    w_ij = log( cij / (ci * cj) ),  b_j = k_b * log(cj), all clamped at EPS.
+    """
+    ci = jnp.maximum(state.ci, EPS)
+    cj = jnp.maximum(state.cj, EPS)
+    cij = jnp.maximum(state.cij, EPS)
+    w = jnp.log(cij) - jnp.log(ci)[:, None] - jnp.log(cj)[None, :]
+    b = k_b * jnp.log(cj)
+    return w, b
+
+
+def learning_cycle(
+    state: MarginalState,
+    ai: jnp.ndarray,
+    aj: jnp.ndarray,
+    lam: float,
+    k_b: float = 1.0,
+    mask: Optional[jnp.ndarray] = None,
+):
+    """One full inner learning cycle (Alg.1 L11-16): marginals -> (w, b).
+
+    If a structural-plasticity mask is given it is applied to w (L16).
+    Returns (new_state, w, b).
+    """
+    mi, mj, mij = batch_means(ai, aj)
+    new_state = update_marginals(state, mi, mj, mij, lam)
+    w, b = weights_from_marginals(new_state, k_b)
+    if mask is not None:
+        w = w * mask
+    return new_state, w, b
+
+
+def hcu_softmax(s: jnp.ndarray, layout: UnitLayout) -> jnp.ndarray:
+    """Softmax computed independently within each HCU (Alg.1 L9).
+
+    s: (..., n_units) support values; returns activations of the same shape
+    where each HCU's MCUs sum to 1.  Reference implementation — the Pallas
+    kernel `repro.kernels.hcu_softmax` matches this.
+    """
+    blocked = layout.blocked(s)
+    out = jax.nn.softmax(blocked, axis=-1)
+    return layout.flat(out)
+
+
+def forward(
+    ai: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    layout: UnitLayout,
+    mask: Optional[jnp.ndarray] = None,
+    gain: float = 1.0,
+) -> jnp.ndarray:
+    """Forward pass (Alg.1 L8-9): support s = ai @ (w o mask) + b, then
+    softmax per HCU.  `gain` is the softmax inverse temperature — >1 makes
+    the HCU competition more decisive (soft winner-take-all), the knob that
+    controls how hard the unsupervised clustering commits.  Reference path;
+    Pallas `masked_matmul` fuses the mask.
+    """
+    if mask is not None:
+        w = w * mask
+    s = ai @ w + b
+    if gain != 1.0:
+        s = s * gain
+    return hcu_softmax(s, layout)

@@ -1,0 +1,88 @@
+"""Hypercolumn / minicolumn geometry for BCPNN layers.
+
+BCPNN organizes every layer as a set of hypercolumn units (HCUs), each
+containing a fixed number of minicolumn units (MCUs).  Activations within an
+HCU form a probability distribution (they are normalized with a softmax over
+the HCU's MCUs), so the *layout* of units — which flat indices belong to
+which HCU — is a first-class object in the framework.
+
+StreamBrain's paper uses uniform layouts (same MCU count per HCU), which is
+also the only layout that maps efficiently onto TPU tiling (the MCU axis
+becomes a dense trailing axis).  We therefore make `UnitLayout` uniform and
+reshape-based; ragged layouts are deliberately unsupported (documented
+design decision, mirrors the paper's own benchmarks: e.g. hidden layer =
+30 HCUs x 100 MCUs = 3000 units for MNIST).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitLayout:
+    """Uniform HCU/MCU layout of a BCPNN layer.
+
+    Attributes:
+      n_hcu: number of hypercolumns.
+      n_mcu: number of minicolumns per hypercolumn.
+    """
+
+    n_hcu: int
+    n_mcu: int
+
+    def __post_init__(self):
+        if self.n_hcu <= 0 or self.n_mcu <= 0:
+            raise ValueError(
+                f"UnitLayout requires positive sizes, got ({self.n_hcu}, {self.n_mcu})"
+            )
+
+    @property
+    def n_units(self) -> int:
+        """Total flat unit count of the layer."""
+        return self.n_hcu * self.n_mcu
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n_hcu, self.n_mcu)
+
+    def blocked(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Reshape a (..., n_units) array to (..., n_hcu, n_mcu)."""
+        if x.shape[-1] != self.n_units:
+            raise ValueError(
+                f"Trailing dim {x.shape[-1]} does not match layout {self.n_units}"
+            )
+        return x.reshape(*x.shape[:-1], self.n_hcu, self.n_mcu)
+
+    def flat(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Inverse of :meth:`blocked`."""
+        if x.shape[-2:] != self.shape:
+            raise ValueError(f"Trailing dims {x.shape[-2:]} != layout {self.shape}")
+        return x.reshape(*x.shape[:-2], self.n_units)
+
+    def hcu_index(self) -> jnp.ndarray:
+        """Map flat unit index -> owning HCU index, shape (n_units,)."""
+        return jnp.repeat(jnp.arange(self.n_hcu), self.n_mcu)
+
+    def validate_divisible_by(self, shards: int) -> None:
+        """Check the HCU axis can be sharded `shards` ways without splitting
+        an HCU (softmax locality requirement for tensor parallelism)."""
+        if self.n_hcu % shards != 0:
+            raise ValueError(
+                f"n_hcu={self.n_hcu} not divisible by shards={shards}; "
+                "HCUs must never be split across model-parallel shards"
+            )
+
+
+def complementary_layout(n_features: int) -> UnitLayout:
+    """Layout used for complementary-coded continuous inputs: each scalar
+    feature x in [0,1] becomes one 2-MCU HCU holding (x, 1-x)."""
+    return UnitLayout(n_hcu=n_features, n_mcu=2)
+
+
+def onehot_layout(n_classes: int) -> UnitLayout:
+    """Output layer layout for classification: one HCU whose MCUs are the
+    classes (the paper's supervised readout layer)."""
+    return UnitLayout(n_hcu=1, n_mcu=n_classes)

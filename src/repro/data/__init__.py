@@ -1,0 +1,13 @@
+# Data substrate: synthetic stand-ins for the paper's benchmarks (no network
+# in the container), BCPNN unit-coding, and the shard-aware batch pipeline.
+from repro.data.synthetic import (
+    ImageDataset, make_image_classes, mnist_like, stl10_like, token_stream,
+)
+from repro.data.coding import complementary_code, onehot_code
+from repro.data.pipeline import ShardedBatcher, epoch_batches, lm_batches
+
+__all__ = [
+    "ImageDataset", "make_image_classes", "mnist_like", "stl10_like",
+    "token_stream", "complementary_code", "onehot_code",
+    "ShardedBatcher", "epoch_batches", "lm_batches",
+]

@@ -1,0 +1,79 @@
+"""Sharding-aware input pipeline.
+
+At pod scale the batch never exists on one host: each host materializes only
+its shard of the global batch and the runtime assembles a global
+jax.Array from per-host shards.  This module provides that path
+(`ShardedBatcher.global_batch`) plus the plain host-local iterator used by
+the CPU examples, with deterministic epoch shuffling (seed + epoch).
+
+LM batches are (tokens, labels=tokens shifted by one) int32; BCPNN batches
+are (coded activations, labels).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardedBatcher:
+    """Feeds shard-resident global batches for a (pod,)data-sharded mesh."""
+
+    mesh: Mesh
+    batch_axes: Tuple[str, ...] = ("data",)
+
+    def sharding(self, ndim: int) -> NamedSharding:
+        return NamedSharding(self.mesh, P(self.batch_axes, *(None,) * (ndim - 1)))
+
+    def global_batch(self, host_arrays: np.ndarray) -> jax.Array:
+        """Assemble a global array from a full host copy (single-host case) —
+        on multi-host this becomes jax.make_array_from_process_local_data."""
+        if jax.process_count() > 1:  # pragma: no cover - multi-host path
+            return jax.make_array_from_process_local_data(
+                self.sharding(host_arrays.ndim), host_arrays
+            )
+        return jax.device_put(host_arrays, self.sharding(host_arrays.ndim))
+
+
+def epoch_batches(
+    x: np.ndarray,
+    y: Optional[np.ndarray],
+    batch_size: int,
+    epoch: int,
+    seed: int = 0,
+    drop_remainder: bool = True,
+) -> Iterator[Tuple[np.ndarray, Optional[np.ndarray]]]:
+    """Deterministically shuffled minibatches for one epoch."""
+    n = x.shape[0]
+    rng = np.random.default_rng(np.random.SeedSequence([seed, epoch]))
+    idx = rng.permutation(n)
+    stop = (n // batch_size) * batch_size if drop_remainder else n
+    for b in range(0, stop, batch_size):
+        sel = idx[b : b + batch_size]
+        yield x[sel], (y[sel] if y is not None else None)
+
+
+def lm_batches(
+    tokens: np.ndarray,
+    batch_size: int,
+    seq_len: int,
+    epoch: int,
+    seed: int = 0,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Chop a token stream into (batch, seq) blocks with next-token labels."""
+    stride = seq_len + 1
+    n_seq = (tokens.shape[0] - 1) // seq_len
+    rng = np.random.default_rng(np.random.SeedSequence([seed, epoch]))
+    order = rng.permutation(n_seq)
+    for b in range(0, n_seq - batch_size + 1, batch_size):
+        sel = order[b : b + batch_size]
+        rows = np.stack([tokens[i * seq_len : i * seq_len + stride] for i in sel])
+        yield {
+            "tokens": rows[:, :-1].astype(np.int32),
+            "labels": rows[:, 1:].astype(np.int32),
+        }

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the BCPNN compute hot-spots the paper itself
+# accelerates (CUDA warp-per-HCU softmax; fused FPGA marginal+weight
+# pipeline; FloPoCo variable-precision rounding), re-tiled for the TPU
+# HBM->VMEM->VREG hierarchy.  ops.py is the jit'd wrapper layer; ref.py the
+# pure-jnp oracles; each kernel module has explicit BlockSpec VMEM tiling.
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: fused BCPNN marginal + weight update (Alg.1 L11-16).
+
+This is the TPU re-design of the paper's FPGA accelerator, whose pipeline
+keeps a C_ij tile resident in BRAM while the matrix engine accumulates the
+batched outer product and a "network probability unit" applies the
+EWMA + log-ratio epilogue.  Here the same fusion maps to the TPU memory
+hierarchy:
+
+  HBM -> VMEM : a_i/a_j batch tiles stream in; the (F_tile, H_tile) C_ij
+                block is read once and stays in VMEM across all batch steps
+                (output-block revisiting);
+  MXU         : acc += a_i_tile^T @ a_j_tile   (the dominant GEMM);
+  VPU epilogue: C_ij' = (1-λ)C_ij + (λ/B)acc,
+                w = [log C_ij' - log c_i' - log c_j'] * mask   (masked Bayes),
+                both written back exactly once.
+
+Compared to the unfused jnp path this saves one full HBM round-trip of the
+(N_F x N_H) C_ij and w tensors per cycle — on the bcpnn_xl config that is the
+difference between memory-bound and MXU-bound (see EXPERIMENTS.md §Perf).
+
+The c_i'/c_j' vector EWMAs are O(F+H) and computed by the wrapper (ops.py);
+they enter the kernel only as epilogue operands.  λ, B, k_B are compile-time
+constants (λ changes never inside a run).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-8
+
+
+def _kernel(nb: int, lam: float, inv_b: float, ai_ref, aj_ref, cij_ref,
+            ci_ref, cj_ref, mask_ref, cij_out_ref, w_ref):
+    b = pl.program_id(2)
+
+    # First batch step: seed the accumulator with the decayed old C_ij.
+    @pl.when(b == 0)
+    def _():
+        cij_out_ref[...] = (1.0 - lam) * cij_ref[...].astype(jnp.float32)
+
+    # MXU: contraction over the (local) batch tile.
+    ai = ai_ref[...].astype(jnp.float32)  # (bt, ft)
+    aj = aj_ref[...].astype(jnp.float32)  # (bt, ht)
+    acc = jax.lax.dot_general(
+        ai, aj, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    cij_out_ref[...] += (lam * inv_b) * acc
+
+    # Last batch step: Bayesian weight epilogue on the resident tile.
+    @pl.when(b == nb - 1)
+    def _():
+        cij_new = cij_out_ref[...]
+        log_ci = jnp.log(jnp.maximum(ci_ref[...], EPS))  # (ft, 1)
+        log_cj = jnp.log(jnp.maximum(cj_ref[...], EPS))  # (1, ht)
+        w = jnp.log(jnp.maximum(cij_new, EPS)) - log_ci - log_cj
+        w_ref[...] = (w * mask_ref[...].astype(jnp.float32)).astype(w_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lam", "block_b", "block_f", "block_h", "interpret"),
+)
+def bcpnn_update_cij_w(
+    ai: jnp.ndarray,
+    aj: jnp.ndarray,
+    cij: jnp.ndarray,
+    ci_new: jnp.ndarray,
+    cj_new: jnp.ndarray,
+    mask: jnp.ndarray,
+    lam: float,
+    block_b: int = 128,
+    block_f: int = 128,
+    block_h: int = 128,
+    interpret: bool = False,
+):
+    """Fused C_ij EWMA + masked weight computation.
+
+    ai (B, F), aj (B, H), cij (F, H) f32, ci_new (F,) f32, cj_new (H,) f32,
+    mask (F, H).  Returns (cij_new f32, w f32).  Padding: batch with zeros
+    (outer-product contributions vanish), F/H to tile multiples (sliced off).
+    """
+    b, f = ai.shape
+    h = aj.shape[1]
+    bt = min(block_b, b)
+    ft = min(block_f, f)
+    ht = min(block_h, h)
+    bp = -(-b // bt) * bt
+    fp = -(-f // ft) * ft
+    hp = -(-h // ht) * ht
+
+    ai_p = jnp.pad(ai, ((0, bp - b), (0, fp - f)))
+    aj_p = jnp.pad(aj, ((0, bp - b), (0, hp - h)))
+    cij_p = jnp.pad(cij, ((0, fp - f), (0, hp - h)), constant_values=1.0)
+    ci_p = jnp.pad(ci_new, (0, fp - f), constant_values=1.0).reshape(fp, 1)
+    cj_p = jnp.pad(cj_new, (0, hp - h), constant_values=1.0).reshape(1, hp)
+    mask_p = jnp.pad(mask.astype(jnp.float32), ((0, fp - f), (0, hp - h)))
+
+    nb = bp // bt
+    grid = (fp // ft, hp // ht, nb)  # batch contraction innermost
+    kernel = functools.partial(_kernel, nb, float(lam), 1.0 / b)
+    cij_new, w = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((fp, hp), jnp.float32),
+            jax.ShapeDtypeStruct((fp, hp), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, ft), lambda i, j, k: (k, i)),  # ai
+            pl.BlockSpec((bt, ht), lambda i, j, k: (k, j)),  # aj
+            pl.BlockSpec((ft, ht), lambda i, j, k: (i, j)),  # cij (old)
+            pl.BlockSpec((ft, 1), lambda i, j, k: (i, 0)),   # ci_new
+            pl.BlockSpec((1, ht), lambda i, j, k: (0, j)),   # cj_new
+            pl.BlockSpec((ft, ht), lambda i, j, k: (i, j)),  # mask
+        ],
+        out_specs=(
+            pl.BlockSpec((ft, ht), lambda i, j, k: (i, j)),  # cij_new (acc)
+            pl.BlockSpec((ft, ht), lambda i, j, k: (i, j)),  # w
+        ),
+        interpret=interpret,
+    )(ai_p, aj_p, cij_p, ci_p, cj_p, mask_p)
+    return cij_new[:f, :h], w[:f, :h]

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: elementwise round-to-nearest-even mantissa truncation.
+
+The TPU realization of the paper's FloPoCo variable-precision FPUs: instead
+of synthesizing BF14..BF28 arithmetic units, we *emulate* a reduced-precision
+datapath by rounding f32 values to the target mantissa width at every
+algebraic stage boundary (see repro.precision).  This kernel is the fused,
+bandwidth-bound inner op: bitmask RNE on the VPU integer path, one HBM
+read + write, no extra temporaries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(shift: int, x_ref, o_ref):
+    x = x_ref[...]
+    u = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    bias = jnp.uint32((1 << (shift - 1)) - 1)
+    lsb = (u >> shift) & jnp.uint32(1)
+    keep = jnp.uint32(0xFFFFFFFF ^ ((1 << shift) - 1))
+    rounded = (u + bias + lsb) & keep
+    out = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+    o_ref[...] = jnp.where(jnp.isfinite(x), out, x)
+
+
+@functools.partial(jax.jit, static_argnames=("mantissa_bits", "block", "interpret"))
+def bf_round(
+    x: jnp.ndarray,
+    mantissa_bits: int,
+    block: int = 1024,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """RNE-round f32 x to `mantissa_bits` of mantissa, preserving shape."""
+    if not (1 <= mantissa_bits <= 23):
+        raise ValueError(f"mantissa_bits must be in [1,23], got {mantissa_bits}")
+    if mantissa_bits == 23:
+        return x.astype(jnp.float32)
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    # 2D-normalize for TPU tiling: (rows, 128) lanes.
+    lanes = 128
+    rows = -(-n // lanes)
+    br = min(block // lanes if block >= lanes else 1, rows) or 1
+    rp = -(-rows // br) * br
+    padded = jnp.pad(flat, (0, rp * lanes - n)).reshape(rp, lanes)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, 23 - mantissa_bits),
+        out_shape=jax.ShapeDtypeStruct((rp, lanes), jnp.float32),
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        interpret=interpret,
+    )(padded)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: softmax within hypercolumns.
+
+TPU adaptation of the paper's CUDA warp-per-HCU softmax.  The GPU version
+uses warp shuffles for the intra-HCU max/sum; on TPU there is no shuffle —
+instead we make the MCU axis the *lane* (last, 128-wide) dimension so the
+reductions are plain VREG lane reductions, and tile (batch x HCU) across the
+grid.  The wrapper pads MCUs to the lane width with -inf (exp(-inf)=0 keeps
+sums exact) and hypercolumns/batch to the tile grid.
+
+Block layout: s is viewed as (B, H, M); each grid step owns a
+(block_b, block_h, M_padded) VMEM tile.  VMEM footprint per step =
+block_b * block_h * M_padded * 4B (default 8*8*128*4 = 256 KiB in+out).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(s_ref, o_ref):
+    x = s_ref[...].astype(jnp.float32)  # (bb, bh, M)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (e / z).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_hcu", "n_mcu", "block_b", "block_h", "interpret")
+)
+def hcu_softmax(
+    s: jnp.ndarray,
+    n_hcu: int,
+    n_mcu: int,
+    block_b: int = 8,
+    block_h: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """s: (B, n_hcu*n_mcu) -> per-HCU softmax activations, same shape/dtype."""
+    if s.ndim != 2 or s.shape[-1] != n_hcu * n_mcu:
+        raise ValueError(f"bad shape {s.shape} for layout ({n_hcu},{n_mcu})")
+    b = s.shape[0]
+    x = s.reshape(b, n_hcu, n_mcu)
+
+    # Pad: batch/HCU to tile multiples (softmax rows are independent, padded
+    # rows are discarded); MCU lanes to 128 with -inf (zero post-exp mass).
+    mp = max(128, -(-n_mcu // 128) * 128)
+    bb = min(block_b, b)
+    bh = min(block_h, n_hcu)
+    bpad = -(-b // bb) * bb - b
+    hpad = -(-n_hcu // bh) * bh - n_hcu
+    x = jnp.pad(
+        x,
+        ((0, bpad), (0, hpad), (0, mp - n_mcu)),
+        constant_values=jnp.asarray(-jnp.inf, s.dtype),
+    )
+
+    grid = (x.shape[0] // bb, x.shape[1] // bh)
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, s.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bb, bh, mp), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((bb, bh, mp), lambda i, j: (i, j, 0)),
+        interpret=interpret,
+    )(x)
+    return out[:b, :n_hcu, :n_mcu].reshape(b, n_hcu * n_mcu)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: forward support computation s = x @ (w ∘ mask) + b.
+
+Fuses the structural-plasticity mask (Alg.1 L16) into the forward GEMM
+(Alg.1 L8): the mask is applied to each weight tile *in VMEM* right before
+the MXU dot, so the masked weight matrix is never materialized in HBM —
+saving an (N_F x N_H) write+read per batch versus the naive `(w*mask) @`.
+
+Standard accumulate-over-K matmul pattern: grid (M/bm, N/bn, K/bk) with the
+contraction dim innermost, output block revisited across K steps, bias added
+on the final step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(nk: int, has_mask: bool, x_ref, w_ref, b_ref, mask_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    if has_mask:
+        w = w * mask_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32),
+        w,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _():
+        o_ref[...] += b_ref[...].astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"),
+)
+def masked_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x (B, F) @ (w (F, H) ∘ mask) + b (H,) -> (B, H) f32."""
+    m, kdim = x.shape
+    n = w.shape[1]
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, kdim)
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-kdim // bk) * bk
+
+    x_p = jnp.pad(x, ((0, mp - m), (0, kp - kdim)))
+    w_p = jnp.pad(w, ((0, kp - kdim), (0, np_ - n)))
+    b_p = jnp.pad(b, (0, np_ - n)).reshape(1, np_)
+    has_mask = mask is not None
+    mask_p = (
+        jnp.pad(mask.astype(jnp.float32), ((0, kp - kdim), (0, np_ - n)))
+        if has_mask
+        else jnp.ones((1, 1), jnp.float32)  # dummy operand, never read
+    )
+
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+    kernel = functools.partial(_kernel, nk, has_mask)
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+            if has_mask
+            else pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        interpret=interpret,
+    )(x_p, w_p, b_p, mask_p)
+    return out[:m, :n]

@@ -1,0 +1,80 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+This is the layer the rest of the framework imports (``repro.core.layers``
+routes here when ``use_kernels=True``).  Responsibilities:
+
+* backend dispatch: ``interpret=True`` when not running on a real TPU, so the
+  kernels validate bit-for-bit on CPU (the container) and compile natively on
+  the TPU target;
+* shape plumbing between the framework's (MarginalState, UnitLayout) level
+  and the kernels' raw-array level;
+* the cheap O(F+H) vector updates that sit around the fused
+  ``bcpnn_update_cij_w`` GEMM kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bcpnn_update as _bk
+from repro.kernels import bf_round as _bfk
+from repro.kernels import hcu_softmax as _sk
+from repro.kernels import masked_matmul as _mk
+
+
+@functools.lru_cache(maxsize=1)
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hcu_softmax(s: jnp.ndarray, n_hcu: int, n_mcu: int) -> jnp.ndarray:
+    return _sk.hcu_softmax(s, n_hcu=n_hcu, n_mcu=n_mcu, interpret=_interpret())
+
+
+def masked_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    return _mk.masked_matmul(x, w, b, mask=mask, interpret=_interpret())
+
+
+def bf_round(x: jnp.ndarray, mantissa_bits: int) -> jnp.ndarray:
+    return _bfk.bf_round(x, mantissa_bits, interpret=_interpret())
+
+
+def bcpnn_update(
+    marginals,
+    ai: jnp.ndarray,
+    aj: jnp.ndarray,
+    lam: float,
+    k_b: float = 1.0,
+    mask: Optional[jnp.ndarray] = None,
+):
+    """Full Alg.1 L11-16 cycle with the fused Pallas GEMM+epilogue kernel.
+
+    marginals: repro.core.learning.MarginalState.  Returns
+    (new MarginalState, w, b) matching learning.learning_cycle exactly.
+    """
+    from repro.core.learning import EPS, MarginalState
+
+    b_sz = ai.shape[0]
+    one_m = 1.0 - lam
+    # Vector EWMAs (O(F+H), wrapper-side).
+    ci_new = one_m * marginals.ci + lam * jnp.mean(ai.astype(jnp.float32), axis=0)
+    cj_new = one_m * marginals.cj + lam * jnp.mean(aj.astype(jnp.float32), axis=0)
+    m = (
+        mask
+        if mask is not None
+        else jnp.ones((ai.shape[1], aj.shape[1]), jnp.float32)
+    )
+    cij_new, w = _bk.bcpnn_update_cij_w(
+        ai, aj, marginals.cij, ci_new, cj_new, m, lam=float(lam),
+        interpret=_interpret(),
+    )
+    bias = k_b * jnp.log(jnp.maximum(cj_new, EPS))
+    return MarginalState(ci=ci_new, cj=cj_new, cij=cij_new), w, bias

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth: the kernels in
+``hcu_softmax.py`` / ``bcpnn_update.py`` / ``masked_matmul.py`` /
+``bf_round.py`` are asserted allclose against these across shape/dtype
+sweeps in ``tests/test_kernels_*.py``.  They are also the fallback path the
+framework uses when ``use_kernels=False``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def hcu_softmax(s: jnp.ndarray, n_hcu: int, n_mcu: int) -> jnp.ndarray:
+    """Softmax within each hypercolumn: s (..., n_hcu*n_mcu)."""
+    blocked = s.reshape(*s.shape[:-1], n_hcu, n_mcu)
+    out = jax.nn.softmax(blocked.astype(jnp.float32), axis=-1)
+    return out.reshape(s.shape).astype(s.dtype)
+
+
+def bcpnn_update(
+    ai: jnp.ndarray,
+    aj: jnp.ndarray,
+    ci: jnp.ndarray,
+    cj: jnp.ndarray,
+    cij: jnp.ndarray,
+    lam: float,
+    k_b: float = 1.0,
+    mask: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused Alg.1 L11-16: EWMA marginals then Bayesian weights/bias.
+
+    Returns (ci', cj', cij', w, b).  The batched outer product a_i^T a_j / B
+    is the dominant FLOP cost (the paper's performance model); everything
+    accumulates in f32.
+    """
+    b = ai.shape[0]
+    one_m = 1.0 - lam
+    ai32 = ai.astype(jnp.float32)
+    aj32 = aj.astype(jnp.float32)
+    mi = jnp.mean(ai32, axis=0)
+    mj = jnp.mean(aj32, axis=0)
+    mij = jnp.einsum("bi,bj->ij", ai32, aj32, preferred_element_type=jnp.float32) / b
+    ci_n = one_m * ci + lam * mi
+    cj_n = one_m * cj + lam * mj
+    cij_n = one_m * cij + lam * mij
+    w = (
+        jnp.log(jnp.maximum(cij_n, EPS))
+        - jnp.log(jnp.maximum(ci_n, EPS))[:, None]
+        - jnp.log(jnp.maximum(cj_n, EPS))[None, :]
+    )
+    if mask is not None:
+        w = w * mask
+    bias = k_b * jnp.log(jnp.maximum(cj_n, EPS))
+    return ci_n, cj_n, cij_n, w, bias
+
+
+def masked_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """s = x @ (w*mask) + b with f32 accumulation (Alg.1 L8 with L16 fused)."""
+    weff = w * mask if mask is not None else w
+    s = jnp.dot(x, weff, preferred_element_type=jnp.float32)
+    if b is not None:
+        s = s + b.astype(jnp.float32)
+    return s.astype(x.dtype) if x.dtype == jnp.bfloat16 else s
+
+
+def bf_round(x: jnp.ndarray, mantissa_bits: int) -> jnp.ndarray:
+    """Round-to-nearest-even truncation of the f32 mantissa to
+    `mantissa_bits` (IEEE-754 sign/8-bit exponent preserved) — the FloPoCo
+    BF14..BF28 operator family from the paper's FPGA study.
+
+    mantissa_bits=23 is the identity; 7 is bfloat16.  Non-finite values pass
+    through unchanged.  Mantissa carry may propagate into the exponent
+    (correct RNE behaviour near binade boundaries).
+    """
+    if not (1 <= mantissa_bits <= 23):
+        raise ValueError(f"mantissa_bits must be in [1,23], got {mantissa_bits}")
+    if mantissa_bits == 23:
+        return x.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    u = jax.lax.bitcast_convert_type(x32, jnp.uint32)
+    shift = 23 - mantissa_bits
+    bias = jnp.uint32((1 << (shift - 1)) - 1)
+    lsb = (u >> shift) & jnp.uint32(1)
+    rounded = (u + bias + lsb) & jnp.uint32(0xFFFFFFFF ^ ((1 << shift) - 1))
+    out = jax.lax.bitcast_convert_type(rounded, jnp.float32)
+    return jnp.where(jnp.isfinite(x32), out, x32)

@@ -1,0 +1,32 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+
+Single pod:  (16, 16) = 256 chips, axes (data, model).
+Multi-pod:   (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod axis
+is pure data parallelism across the DCI; model parallelism never crosses a
+pod boundary (ICI-only), which is the production constraint this mesh
+encodes.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over whatever devices exist (CPU tests: usually 1)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,6 @@
+# LM model zoo: assigned-architecture families (dense GQA, MLA+MoE, SSD,
+# hybrid, enc-dec, VLM) as pure-functional JAX with scan-over-layers and
+# declarative sharding.
+from repro.models.lm import CausalLM, EncDecLM, build_model
+
+__all__ = ["CausalLM", "EncDecLM", "build_model"]

@@ -1,0 +1,432 @@
+"""Attention: GQA (+sliding window), MLA (DeepSeek-V2), cross-attn, decode.
+
+Memory-efficient by construction: the train/prefill path is an
+online-softmax double-scan over (q_chunk, kv_chunk) tiles — the
+flash-attention recurrence expressed in XLA — so the (S x S) score matrix is
+never materialized (essential for the prefill_32k and train_4k cells to fit
+HBM, and keeps ``memory_analysis()`` honest in the dry-run).
+
+Decode is a separate single-token path reading a preallocated KV cache
+(length-masked), with the MLA *absorbed* formulation: the latent c_kv is the
+cache (512+64 dims/token instead of H*(128+128) = 32k dims/token — the
+128-head KV memory win that is DeepSeek-V2's core serving trick).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, apply_rope, dense_init, rmsnorm, rmsnorm_init, rmsnorm_logical
+from repro.sharding.rules import L, ShardCtx
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- masking
+def _mask_bias(
+    q_pos: jnp.ndarray,  # (qc,) absolute positions of the q tile
+    kv_pos: jnp.ndarray,  # (kc,) absolute positions of the kv tile
+    causal: bool,
+    window: Optional[int],
+    kv_len: Optional[jnp.ndarray],  # scalar valid-length (decode) or None
+) -> jnp.ndarray:
+    """Additive mask bias (qc, kc): 0 where attendable, NEG_INF elsewhere."""
+    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        ok &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= kv_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        ok &= kv_pos[None, :] < kv_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ------------------------------------------------- chunked online-softmax
+def chunked_attention(
+    q: jnp.ndarray,  # (B, Sq, KH, G, D)
+    k: jnp.ndarray,  # (B, Skv, KH, D)
+    v: jnp.ndarray,  # (B, Skv, KH, Dv)
+    q_offset: int | jnp.ndarray = 0,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Flash-style attention; returns (B, Sq, KH, G, Dv).
+
+    q_offset: absolute position of q[0] (prefill continuation / decode).
+    Chunk sizes must divide Sq/Skv (configs use powers of two).
+    """
+    b, sq, kh, g, d = q.shape
+    skv, dv = k.shape[1], v.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    # Pad ragged tails (the assigned shapes are chunk multiples; smoke/VLM
+    # concat shapes may not be).  Padded kv is excluded via the kv_len mask;
+    # padded q rows are sliced off below.
+    sq_p = -(-sq // qc) * qc
+    skv_p = -(-skv // kc) * kc
+    kv_len = jnp.asarray(skv, jnp.int32) if skv_p != skv else None
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    sq_real, skv_real = sq, skv
+    sq, skv = sq_p, skv_p
+    nq, nk = sq // qc, skv // kc
+
+    qs = jnp.moveaxis(q.reshape(b, nq, qc, kh, g, d), 1, 0)  # (nq,B,qc,KH,G,D)
+    ks = jnp.moveaxis(k.reshape(b, nk, kc, kh, d), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, kc, kh, dv), 1, 0)
+
+    def q_step(_, qi_x):
+        qi, qx = qi_x  # qx: (B,qc,KH,G,D)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kx, vx = ki_kv
+            kv_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qx, kx, preferred_element_type=jnp.float32
+            ) * scale
+            s = s + _mask_bias(q_pos, kv_pos, causal, window, kv_len)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(qx.dtype), vx,
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kh, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs),
+            unroll=True if unroll else 1,
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B,KH,G,qc,Dv)
+        return None, jnp.moveaxis(out, 3, 1)  # (B,qc,KH,G,Dv)
+
+    _, outs = jax.lax.scan(
+        q_step, None, (jnp.arange(nq), qs), unroll=True if unroll else 1
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, kh, g, dv)
+    return out[:, :sq_real].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, KH, G, D)
+    k_cache: jnp.ndarray,  # (B, Smax, KH, D)
+    v_cache: jnp.ndarray,  # (B, Smax, KH, Dv)
+    kv_len: jnp.ndarray,  # scalar int32 — valid prefix length
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token attention over a length-masked cache: (B,1,KH,G,Dv)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    smax = k_cache.shape[1]
+    kv_pos = jnp.arange(smax)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    q_pos = jnp.asarray([kv_len - 1])  # the new token's position
+    bias = _mask_bias(q_pos, kv_pos, True, window, kv_len)  # (1, Smax)
+    s = s + bias[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------- GQA
+def _h_eff(cfg) -> int:
+    return getattr(cfg, "pad_heads_to", None) or cfg.n_heads
+
+
+def gqa_init(key, cfg) -> Params:
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    he = _h_eff(cfg)
+    if he % kh != 0:
+        raise ValueError(
+            f"pad_heads_to={he} must be a multiple of n_kv_heads={kh} "
+            "(pad per kv group; archs like phi3 (40q/10kv) additionally "
+            "need kv-head padding — see DESIGN.md perf levers)"
+        )
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    wq = dense_init(k1, (d, he, dh))
+    wo = dense_init(k4, (he, dh, d), in_axis=0)
+    if he != h:
+        # Zero-pad PER KV-GROUP (the (KH, G) blocked layout is kv-major, so
+        # tail-padding the flat head axis would re-pair real heads with the
+        # wrong kv head).  Padded heads' q columns are zero; their garbage
+        # attention outputs are annihilated by the zero wo rows, which also
+        # zero their gradients — semantics-preserving.
+        g, ge = h // kh, he // kh
+        wq_b = wq.reshape(d, kh, ge, dh).at[:, :, g:, :].set(0.0)
+        wq = wq_b.reshape(d, he, dh)
+        wo_b = wo.reshape(kh, ge, dh, d).at[:, g:, :, :].set(0.0)
+        wo = wo_b.reshape(he, dh, d)
+    return {
+        "wq": wq,
+        "wk": dense_init(k2, (d, kh, dh)),
+        "wv": dense_init(k3, (d, kh, dh)),
+        "wo": wo,
+    }
+
+
+def gqa_logical():
+    return {
+        "wq": L("d_fsdp", "heads", "qkv"),
+        "wk": L("d_fsdp", "kv_heads", "qkv"),
+        "wv": L("d_fsdp", "kv_heads", "qkv"),
+        "wo": L("heads", "qkv", "d_fsdp"),
+    }
+
+
+def gqa_qkv(params: Params, x: jnp.ndarray, positions, cfg, rope: bool = True):
+    """Project to grouped q (B,S,KH,G,D) and k/v (B,S,KH,D)."""
+    dt = x.dtype
+    h, kh = _h_eff(cfg), cfg.n_kv_heads
+    g = h // kh
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    b, s = x.shape[:2]
+    q = q.reshape(b, s, kh, g, cfg.d_head)
+    return q, k, v
+
+
+def gqa_out(params: Params, attn: jnp.ndarray, cfg) -> jnp.ndarray:
+    """attn (B,S,KH,G,Dv) -> (B,S,d)."""
+    b, s = attn.shape[:2]
+    a = attn.reshape(b, s, _h_eff(cfg), cfg.d_head)
+    return jnp.einsum("bshk,hkd->bsd", a, params["wo"].astype(attn.dtype))
+
+
+def gqa_attention(
+    params: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg,
+    ctx: ShardCtx,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    q, k, v = gqa_qkv(params, x, positions, cfg)
+
+    # Padded head-group parallelism (beyond-paper perf lever; activated by
+    # the rule override q_groups -> model).  When neither KH nor KH*G
+    # divides the model axis, baseline attention compute is REPLICATED on
+    # every model shard (16x waste).  Padding the group dim G up to a
+    # multiple of the axis lets every shard own a slice of query heads; the
+    # zero-padded heads are sliced off before the output projection and XLA
+    # drops their (all-zero) contribution to the psum of wo.
+    tp = ctx.axis_size("model")
+    g_rule = ctx.rule_map.get("q_groups")
+    b, s, kh, g, d = q.shape
+    padded_g = g
+    if g_rule is not None and tp > 1 and (kh % tp != 0):
+        padded_g = -(-g // tp) * tp
+        if padded_g != g:
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, padded_g - g), (0, 0)))
+        q = ctx.cs(q, "batch", "attn_seq", None, "q_groups", None)
+    else:
+        q = ctx.cs(q, "batch", "attn_seq", "kv_heads", None, None)
+    k = ctx.cs(k, "batch", "attn_seq", "kv_heads", None)
+    out = chunked_attention(
+        q, k, v, causal=causal, window=window,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, unroll=ctx.unroll,
+    )
+    if padded_g != g:
+        out = out[:, :, :, :g, :]
+    return gqa_out(params, out, cfg)
+
+
+def cross_attention(
+    params: Params,
+    x: jnp.ndarray,
+    enc: jnp.ndarray,
+    cfg,
+    ctx: ShardCtx,
+) -> jnp.ndarray:
+    """Encoder-decoder cross attention (full, no rope on kv)."""
+    dt = x.dtype
+    h, kh = cfg.n_heads, cfg.n_kv_heads
+    g = h // kh
+    b, s = x.shape[:2]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc, params["wv"].astype(dt))
+    q = q.reshape(b, s, kh, g, cfg.d_head)
+    out = chunked_attention(
+        q, k, v, causal=False, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        unroll=ctx.unroll,
+    )
+    return gqa_out(params, out, cfg)
+
+
+def gqa_decode(
+    params: Params,
+    x: jnp.ndarray,  # (B, 1, d)
+    cache_k: jnp.ndarray,  # (B, Smax, KH, D) — already contains this token
+    cache_v: jnp.ndarray,
+    kv_len: jnp.ndarray,
+    cfg,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    positions = (kv_len - 1)[None] if jnp.ndim(kv_len) == 0 else kv_len
+    q, _, _ = gqa_qkv(params, x, jnp.reshape(positions, (1,)), cfg)
+    out = decode_attention(q, cache_k, cache_v, kv_len, window=window)
+    return gqa_out(params, out, cfg)
+
+
+def gqa_kv_for_cache(params: Params, x: jnp.ndarray, positions, cfg):
+    """k/v (with rope) for cache insertion, shapes (B,S,KH,D)."""
+    dt = x.dtype
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# ---------------------------------------------------------------- MLA
+def mla_init(key, cfg) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dvh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    p = {
+        "kv_down": dense_init(ks[2], (d, kl + dr)),
+        "kv_norm": rmsnorm_init(kl),
+        "k_up": dense_init(ks[3], (kl, h, dn)),
+        "v_up": dense_init(ks[4], (kl, h, dvh)),
+        "wo": dense_init(ks[5], (h, dvh, d)),
+    }
+    if ql > 0:
+        p["q_down"] = dense_init(ks[0], (d, ql))
+        p["q_norm"] = rmsnorm_init(ql)
+        p["q_up"] = dense_init(ks[1], (ql, h, dn + dr))
+    else:
+        p["wq"] = dense_init(ks[0], (d, h, dn + dr))
+    return p
+
+
+def mla_logical(cfg) -> Params:
+    p = {
+        "kv_down": L("d_fsdp", None),
+        "kv_norm": rmsnorm_logical(),
+        "k_up": L("d_fsdp", "heads", None),
+        "v_up": L("d_fsdp", "heads", None),
+        "wo": L("heads", None, "d_fsdp"),
+    }
+    if cfg.q_lora_rank > 0:
+        p["q_down"] = L("d_fsdp", None)
+        p["q_norm"] = rmsnorm_logical()
+        p["q_up"] = L("d_fsdp", "heads", None)
+    else:
+        p["wq"] = L("d_fsdp", "heads", None)
+    return p
+
+
+def _mla_q(params, x, positions, cfg):
+    dt = x.dtype
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank > 0:
+        ql = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["q_down"].astype(dt)))
+        q = jnp.einsum("bsr,rhk->bshk", ql, params["q_up"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_latent(params, x, positions, cfg):
+    """c_kv (B,S,KL) + roped shared k_rope (B,S,DR) — the decode cache."""
+    dt = x.dtype
+    kl, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv = jnp.einsum("bsd,dr->bsr", x, params["kv_down"].astype(dt))
+    c_kv = rmsnorm(params["kv_norm"], kv[..., :kl])
+    k_rope = apply_rope(kv[..., kl:][..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(
+    params: Params, x: jnp.ndarray, positions, cfg, ctx: ShardCtx,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Train/prefill path: expand latent to per-head k/v, chunked attention."""
+    dt = x.dtype
+    b, s = x.shape[:2]
+    h = cfg.n_heads
+    dn, dr, dvh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(params, x, positions, cfg)
+    c_kv, k_rope = mla_latent(params, x, positions, cfg)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["k_up"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["v_up"].astype(dt))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = q.reshape(b, s, h, 1, dn + dr)  # KH=H, G=1
+    q = ctx.cs(q, "batch", "seq", "heads", None, None)
+    k = ctx.cs(k, "batch", "seq", "heads", None)
+    out = chunked_attention(
+        q, k, v, causal=causal, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        scale=1.0 / math.sqrt(dn + dr), unroll=ctx.unroll,
+    )
+    out = out.reshape(b, s, h, dvh)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+
+
+def mla_decode(
+    params: Params,
+    x: jnp.ndarray,  # (B, 1, d)
+    cache_ckv: jnp.ndarray,  # (B, Smax, KL) — includes this token
+    cache_krope: jnp.ndarray,  # (B, Smax, DR)
+    kv_len: jnp.ndarray,
+    cfg,
+) -> jnp.ndarray:
+    """Absorbed-latent decode: O(S*(KL+DR)) per head, cache stays latent."""
+    dt = x.dtype
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dvh, kl = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    positions = jnp.reshape(kv_len - 1, (1,))
+    q_nope, q_rope = _mla_q(params, x, positions, cfg)  # (B,1,H,dn/dr)
+    # Absorb k_up into q: q_lat (B,1,H,KL)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, params["k_up"].astype(dt))
+    s_lat = jnp.einsum(
+        "bqhr,bsr->bhqs", q_lat, cache_ckv, preferred_element_type=jnp.float32
+    )
+    s_rope = jnp.einsum(
+        "bqhn,bsn->bhqs", q_rope, cache_krope, preferred_element_type=jnp.float32
+    )
+    s = (s_lat + s_rope) / math.sqrt(dn + dr)
+    kv_pos = jnp.arange(cache_ckv.shape[1])
+    bias = _mask_bias(positions, kv_pos, True, None, kv_len)
+    p = jax.nn.softmax(s + bias[None, None], axis=-1)
+    out_lat = jnp.einsum(
+        "bhqs,bsr->bqhr", p.astype(dt), cache_ckv, preferred_element_type=jnp.float32
+    ).astype(dt)
+    out = jnp.einsum("bqhr,rhk->bqhk", out_lat, params["v_up"].astype(dt))
+    return jnp.einsum("bqhk,hkd->bqd", out, params["wo"].astype(dt))

@@ -1,0 +1,188 @@
+"""Layer blocks + scan-over-layers drivers for every model family.
+
+All deep stacks are ``lax.scan`` over stacked per-layer params so the HLO
+(and therefore dry-run compile time at 512 devices) is O(1) in depth, with
+``jax.checkpoint`` (remat) around the block body for train memory.
+
+Per-layer heterogeneity inside a scan is expressed with *scanned scalars*
+(e.g. gemma3's per-layer window size / rope theta arrays), never Python
+branching, so one compiled body serves all layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    Params,
+    mlp_apply,
+    mlp_init,
+    mlp_logical,
+    norm_apply,
+    norm_init,
+    norm_logical,
+)
+from repro.sharding.rules import L, ShardCtx
+
+
+# ----------------------------------------------------------- one tf block
+def tf_block_init(key, cfg, use_moe: bool, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln1": norm_init(cfg.norm, cfg.d_model),
+        "ln2": norm_init(cfg.norm, cfg.d_model),
+        "attn": (
+            attn.mla_init(ks[0], cfg) if cfg.attn_kind == "mla"
+            else attn.gqa_init(ks[0], cfg)
+        ),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    if cross:
+        p["ln_x"] = norm_init(cfg.norm, cfg.d_model)
+        p["xattn"] = attn.gqa_init(ks[2], cfg)
+    return p
+
+
+def tf_block_logical(cfg, use_moe: bool, cross: bool = False) -> Params:
+    p = {
+        "ln1": norm_logical(cfg.norm),
+        "ln2": norm_logical(cfg.norm),
+        "attn": (
+            attn.mla_logical(cfg) if cfg.attn_kind == "mla" else attn.gqa_logical()
+        ),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.moe_logical(cfg)
+    else:
+        p["mlp"] = mlp_logical(cfg.act)
+    if cross:
+        p["ln_x"] = norm_logical(cfg.norm)
+        p["xattn"] = attn.gqa_logical()
+    return p
+
+
+def tf_block_apply(
+    params: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg,
+    ctx: ShardCtx,
+    causal: bool = True,
+    window: Optional[Any] = None,  # None | int | traced scalar
+    rope_theta: Optional[Any] = None,
+    use_moe: bool = False,
+    enc: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-norm residual block; returns (x, moe aux loss or 0)."""
+    h = norm_apply(cfg.norm, params["ln1"], x)
+    if cfg.attn_kind == "mla":
+        a = attn.mla_attention(params["attn"], h, positions, cfg, ctx, causal=causal)
+    else:
+        a = attn.gqa_attention(
+            params["attn"], h, positions,
+            cfg if rope_theta is None else _with_theta(cfg, rope_theta),
+            ctx, causal=causal, window=window,
+        )
+    x = x + a
+    if enc is not None:
+        hx = norm_apply(cfg.norm, params["ln_x"], x)
+        x = x + attn.cross_attention(params["xattn"], hx, enc, cfg, ctx)
+    h2 = norm_apply(cfg.norm, params["ln2"], x)
+    if use_moe:
+        f, aux = moe_mod.moe_apply(params["moe"], h2, cfg, ctx)
+    else:
+        f, aux = mlp_apply(params["mlp"], h2, cfg.act, ctx), jnp.zeros((), jnp.float32)
+    x = ctx.cs(x + f, "batch", "seq", None)
+    return x, aux
+
+
+class _ThetaCfg:
+    """cfg proxy overriding rope_theta with a (possibly traced) value."""
+
+    def __init__(self, cfg, theta):
+        object.__setattr__(self, "_cfg", cfg)
+        object.__setattr__(self, "_theta", theta)
+
+    def __getattr__(self, name):
+        if name == "rope_theta":
+            return self._theta
+        return getattr(self._cfg, name)
+
+
+def _with_theta(cfg, theta):
+    return _ThetaCfg(cfg, theta)
+
+
+# ----------------------------------------------------- scanned layer stacks
+def stack_init(key, cfg, n: int, init_one) -> Params:
+    """vmap a per-layer init over stacked leading axis n."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)
+
+
+def scan_layers(
+    params_stacked: Params,
+    x: jnp.ndarray,
+    body,
+    per_layer: Optional[Tuple[jnp.ndarray, ...]] = None,
+    remat: bool = True,
+    unroll: bool = False,
+):
+    """x -> scan(body) over stacked params (+optional per-layer scalars).
+
+    body(params_l, x, *scalars_l) -> (x, aux); aux is summed over layers.
+    """
+
+    def step(carry, inp):
+        if per_layer is None:
+            p_l = inp
+            scalars = ()
+        else:
+            p_l, scalars = inp[0], inp[1:]
+        fn = jax.checkpoint(body) if remat else body
+        x_new, aux = fn(p_l, carry, *scalars)
+        return x_new, aux
+
+    xs = params_stacked if per_layer is None else (params_stacked,) + tuple(per_layer)
+    x_out, auxs = jax.lax.scan(step, x, xs, unroll=True if unroll else 1)
+    return x_out, jnp.sum(auxs)
+
+
+# ------------------------------------------------------------ decode scans
+def scan_decode_layers(
+    params_stacked: Params,
+    x: jnp.ndarray,
+    caches: Params,  # stacked (L, ...) pytree
+    body,
+    per_layer: Optional[Tuple[jnp.ndarray, ...]] = None,
+    unroll: bool = False,
+):
+    """Decode step over layers: body(p_l, x, cache_l, *scalars) ->
+    (x, new_cache_l).  Returns (x, new caches stacked)."""
+
+    def step(carry, inp):
+        if per_layer is None:
+            p_l, c_l = inp
+            scalars = ()
+        else:
+            p_l, c_l = inp[0], inp[1]
+            scalars = inp[2:]
+        x_new, c_new = body(p_l, carry, c_l, *scalars)
+        return x_new, c_new
+
+    xs = (
+        (params_stacked, caches)
+        if per_layer is None
+        else (params_stacked, caches) + tuple(per_layer)
+    )
+    x_out, new_caches = jax.lax.scan(step, x, xs, unroll=True if unroll else 1)
+    return x_out, new_caches

@@ -1,0 +1,165 @@
+"""Shared model primitives: norms, embeddings, MLPs, RoPE, init helpers.
+
+Conventions used across the zoo:
+
+* params are nested dicts of jnp arrays; every init function also returns a
+  mirroring tree of ``sharding.L`` logical-axis annotations via the sibling
+  ``*_logical`` function, consumed by ``sharding.param_shardings``;
+* compute dtype is bf16 (cast at use), param/state dtype f32 — the MaxText
+  convention, justified for this paper by its own BF16-resilience study;
+* everything is shape-polymorphic over batch/seq so one code path serves
+  train, prefill, and decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import L, ShardCtx
+
+Params = Dict[str, Any]
+
+
+def cdtype(cfg) -> jnp.dtype:
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def cast(x: jnp.ndarray, cfg) -> jnp.ndarray:
+    return x.astype(cdtype(cfg))
+
+
+# ------------------------------------------------------------------- init
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_logical():
+    return {"scale": L("embed")}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_logical():
+    return {"scale": L("embed"), "bias": L("embed")}
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+def norm_apply(kind: str, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+def norm_init(kind: str, d: int) -> Params:
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def norm_logical(kind: str):
+    return rmsnorm_logical() if kind == "rmsnorm" else layernorm_logical()
+
+
+# --------------------------------------------------------------- embedding
+def embedding_init(key, vocab: int, d: int) -> Params:
+    return {"table": embed_init(key, (vocab, d))}
+
+
+def embedding_logical():
+    return {"table": L("vocab", "d_fsdp")}
+
+
+def embed_tokens(params: Params, tokens: jnp.ndarray, cfg) -> jnp.ndarray:
+    return cast(jnp.take(params["table"], tokens, axis=0), cfg)
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits = x @ table^T, f32 accumulation (vocab sharded over model)."""
+    return jnp.einsum(
+        "...d,vd->...v",
+        x,
+        params["table"].astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# --------------------------------------------------------------------- MLP
+def mlp_init(key, d: int, d_ff: int, act: str) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, (d_ff, d))}
+    if act in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k1, (d, d_ff))
+        p["up"] = dense_init(k3, (d, d_ff))
+    else:  # gelu / relu single-branch
+        p["up"] = dense_init(k1, (d, d_ff))
+    return p
+
+
+def mlp_logical(act: str):
+    p = {"down": L("mlp", "d_fsdp")}
+    if act in ("swiglu", "geglu"):
+        p["gate"] = L("d_fsdp", "mlp")
+        p["up"] = L("d_fsdp", "mlp")
+    else:
+        p["up"] = L("d_fsdp", "mlp")
+    return p
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, act: str, ctx: ShardCtx) -> jnp.ndarray:
+    dt = x.dtype
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, params["gate"].astype(dt))
+        u = jnp.einsum("...d,df->...f", x, params["up"].astype(dt))
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, params["up"].astype(dt))
+        h = jax.nn.gelu(h)
+    h = ctx.cs(h, "batch", "seq", "mlp")
+    return jnp.einsum("...f,fd->...d", h, params["down"].astype(dt))
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4
+) -> jnp.ndarray:
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

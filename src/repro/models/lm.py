@@ -1,0 +1,930 @@
+"""Model assembly: CausalLM (dense/moe/ssm/hybrid/vlm) and EncDecLM.
+
+A Model object owns a ModelConfig + ShardCtx and exposes the pure functions
+the runtime and dry-run consume:
+
+  init(key)                          -> params (f32)
+  logical()                          -> L-annotation tree (sharding)
+  forward(params, batch)             -> (logits f32, aux)
+  loss(params, batch)                -> scalar
+  make_train_step(opt, n_micro)      -> step(params, opt_state, batch)
+  init_cache(batch, seq)             -> decode cache pytree
+  cache_logical(batch, seq)          -> L tree for the cache
+  prefill(params, batch)             -> (last_logits, cache, cur_len)
+  decode_step(params, cache, token, cur_len) -> (logits, new cache)
+
+Depth is always a lax.scan over stacked layer params (O(1) HLO); per-layer
+heterogeneity (gemma3 5:1 local:global) rides in scanned scalar arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import blocks as blk
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    Params,
+    cast,
+    cdtype,
+    dense_init,
+    embed_init,
+    embed_tokens,
+    norm_apply,
+    norm_init,
+    norm_logical,
+)
+from repro.sharding.rules import L, ShardCtx
+
+BIG_WINDOW = 1 << 30  # "no window" sentinel for scanned window arrays
+
+
+def _xent(
+    logits: jnp.ndarray, labels: jnp.ndarray, sharded: bool = False
+) -> jnp.ndarray:
+    """Mean next-token cross entropy; labels == -1 are masked.
+
+    sharded=True uses the where/iota label pick: GSPMD lowers
+    take_along_axis over a vocab-sharded dim only by replicating the logits
+    (an S*V-sized gather per microbatch); the masked-sum form reduces
+    shard-locally and all-reduces a (B,S) scalar field instead.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    if sharded:
+        v = logits.shape[-1]
+        iota = jax.lax.iota(jnp.int32, v)
+        pick = (iota[None, None, :] == labels[..., None]).astype(jnp.float32)
+        ll = jnp.sum(logits * pick, axis=-1)
+    else:
+        safe = jnp.maximum(labels, 0)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+class CausalLM:
+    """Decoder-only LM covering dense / moe / ssm / hybrid / vlm families."""
+
+    def __init__(self, cfg, ctx: Optional[ShardCtx] = None):
+        self.cfg = cfg
+        self.ctx = ctx if ctx is not None else ShardCtx()
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_e, k_l, k_u, k_s = jax.random.split(key, 4)
+        p: Params = {
+            "embed": {"table": embed_init(k_e, (cfg.vocab_size, cfg.d_model))},
+            "final_norm": norm_init(cfg.norm, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = dense_init(k_u, (cfg.d_model, cfg.vocab_size))
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            p["layers"] = blk.stack_init(
+                k_l, cfg, cfg.n_layers,
+                lambda k: blk.tf_block_init(k, cfg, use_moe=False),
+            )
+        elif fam == "moe":
+            fd = cfg.first_dense_layers
+            if fd:
+                p["dense_layers"] = blk.stack_init(
+                    k_s, cfg, fd, lambda k: blk.tf_block_init(k, cfg, use_moe=False)
+                )
+            p["layers"] = blk.stack_init(
+                k_l, cfg, cfg.n_layers - fd,
+                lambda k: blk.tf_block_init(k, cfg, use_moe=True),
+            )
+        elif fam == "ssm":
+            p["layers"] = blk.stack_init(
+                k_l, cfg, cfg.n_layers, lambda k: ssm_mod.mamba2_init(k, cfg)
+            )
+        elif fam == "hybrid":
+            p["layers"] = blk.stack_init(
+                k_l, cfg, cfg.n_layers, lambda k: ssm_mod.mamba2_init(k, cfg)
+            )
+            p["shared_attn"] = blk.tf_block_init(k_s, cfg, use_moe=False)
+        else:
+            raise ValueError(f"bad family {fam}")
+        return p
+
+    def logical(self) -> Params:
+        cfg = self.cfg
+        p: Params = {
+            "embed": {"table": L("vocab", "d_fsdp")},
+            "final_norm": norm_logical(cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = L("d_fsdp", "vocab")
+
+        def stacked(tree):
+            return jax.tree_util.tree_map(
+                lambda l: L("layer", *l.names), tree,
+                is_leaf=lambda x: isinstance(x, L),
+            )
+
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            p["layers"] = stacked(blk.tf_block_logical(cfg, use_moe=False))
+        elif fam == "moe":
+            if cfg.first_dense_layers:
+                p["dense_layers"] = stacked(blk.tf_block_logical(cfg, use_moe=False))
+            p["layers"] = stacked(blk.tf_block_logical(cfg, use_moe=True))
+        elif fam == "ssm":
+            p["layers"] = stacked(ssm_mod.mamba2_logical(cfg))
+        elif fam == "hybrid":
+            p["layers"] = stacked(ssm_mod.mamba2_logical(cfg))
+            p["shared_attn"] = blk.tf_block_logical(cfg, use_moe=False)
+        return p
+
+    # ------------------------------------------------------- layer drivers
+    def _gemma_scan_arrays(self, seq_hint: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(window_l, theta_l) per layer for 5:1 local:global patterns."""
+        cfg = self.cfg
+        ls = []
+        ts = []
+        for i in range(cfg.n_layers):
+            is_global = cfg.global_every > 0 and (i + 1) % cfg.global_every == 0
+            ls.append(BIG_WINDOW if is_global else cfg.window)
+            ts.append(
+                (cfg.rope_theta_global or cfg.rope_theta)
+                if is_global
+                else cfg.rope_theta
+            )
+        return jnp.asarray(ls, jnp.int32), jnp.asarray(ts, jnp.float32)
+
+    def _trunk(self, params: Params, x: jnp.ndarray, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Embedded activations -> final hidden states; returns (x, aux)."""
+        cfg, ctx = self.cfg, self.ctx
+        fam = cfg.family
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if fam in ("dense", "vlm"):
+            if cfg.global_every > 0 and cfg.window is not None:
+                win_l, theta_l = self._gemma_scan_arrays(x.shape[1])
+
+                def body(p_l, h, win, theta):
+                    return blk.tf_block_apply(
+                        p_l, h, positions, cfg, ctx, causal=True,
+                        window=win, rope_theta=theta, use_moe=False,
+                    )
+
+                x, aux = blk.scan_layers(
+                    params["layers"], x, body, per_layer=(win_l, theta_l),
+                    remat=cfg.remat, unroll=ctx.unroll,
+                )
+            else:
+                def body(p_l, h):
+                    return blk.tf_block_apply(
+                        p_l, h, positions, cfg, ctx, causal=True,
+                        window=cfg.window, use_moe=False,
+                    )
+
+                x, aux = blk.scan_layers(
+                    params["layers"], x, body, remat=cfg.remat, unroll=ctx.unroll
+                )
+            aux_total += aux
+
+        elif fam == "moe":
+            if cfg.first_dense_layers:
+                def dbody(p_l, h):
+                    return blk.tf_block_apply(
+                        p_l, h, positions, cfg, ctx, causal=True, use_moe=False
+                    )
+                x, aux = blk.scan_layers(
+                    params["dense_layers"], x, dbody, remat=cfg.remat,
+                    unroll=ctx.unroll,
+                )
+                aux_total += aux
+
+            def body(p_l, h):
+                return blk.tf_block_apply(
+                    p_l, h, positions, cfg, ctx, causal=True, use_moe=True
+                )
+
+            x, aux = blk.scan_layers(
+                params["layers"], x, body, remat=cfg.remat, unroll=ctx.unroll
+            )
+            aux_total += aux
+
+        elif fam == "ssm":
+            def body(p_l, h):
+                return (
+                    h + ssm_mod.mamba2_forward(
+                        p_l, norm_apply(cfg.norm, p_l["norm_in"], h), cfg, ctx
+                    ),
+                    jnp.zeros((), jnp.float32),
+                )
+
+            x, _ = blk.scan_layers(
+                params["layers"], x, body, remat=cfg.remat, unroll=ctx.unroll
+            )
+
+        elif fam == "hybrid":
+            x, aux = self._hybrid_trunk(params, x, positions)
+            aux_total += aux
+        return x, aux_total
+
+    def _hybrid_trunk(self, params, x, positions):
+        """zamba2: groups of mamba layers + one *shared* attention block."""
+        cfg, ctx = self.cfg, self.ctx
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, per) + a.shape[1:]), params["layers"]
+        )
+        shared = params["shared_attn"]
+
+        def mamba_body(p_l, h):
+            return (
+                h + ssm_mod.mamba2_forward(
+                    p_l, norm_apply(cfg.norm, p_l["norm_in"], h), cfg, ctx
+                ),
+                jnp.zeros((), jnp.float32),
+            )
+
+        def group_body(p_g, h):
+            h, _ = blk.scan_layers(
+                p_g, h, mamba_body, remat=cfg.remat, unroll=ctx.unroll
+            )
+            h, _ = blk.tf_block_apply(
+                shared, h, positions, cfg, ctx, causal=True, use_moe=False
+            )
+            return h, jnp.zeros((), jnp.float32)
+
+        x, aux = blk.scan_layers(
+            stacked, x, group_body, remat=False, unroll=ctx.unroll
+        )
+        return x, aux
+
+    # ----------------------------------------------------------- forward
+    def _embed_inputs(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Returns (x (B,S,d), positions (S,))."""
+        cfg, ctx = self.cfg, self.ctx
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        if cfg.frontend is not None and "embeds" in batch:
+            x = jnp.concatenate([cast(batch["embeds"], cfg), x], axis=1)
+        x = ctx.cs(x, "batch", "seq", None)
+        positions = jnp.arange(x.shape[1])
+        return x, positions
+
+    def forward(self, params: Params, batch: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg, ctx = self.cfg, self.ctx
+        x, positions = self._embed_inputs(params, batch)
+        x, aux = self._trunk(params, x, positions)
+        x = norm_apply(cfg.norm, params["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", x, cast(params["embed"]["table"], cfg),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            logits = jnp.einsum(
+                "bsd,dv->bsv", x, cast(params["unembed"], cfg),
+                preferred_element_type=jnp.float32,
+            )
+        logits = ctx.cs(logits, "batch", "seq", "vocab")
+        return logits, aux
+
+    def loss(self, params: Params, batch: Dict) -> jnp.ndarray:
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        if cfg.frontend is not None and "embeds" in batch:
+            # Frontend embeddings occupy the first P positions; score text only.
+            p = batch["embeds"].shape[1]
+            logits = logits[:, p:, :]
+        return _xent(
+            logits, labels, sharded=getattr(cfg, "sharded_xent", False)
+        ) + cfg.aux_loss_coef * aux
+
+    def make_train_step(self, optimizer, n_micro: Optional[int] = None):
+        """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+        from repro.optim.accumulation import microbatched_value_and_grad
+        from repro.optim.adamw import apply_updates
+
+        n_micro = n_micro if n_micro is not None else self.cfg.n_micro
+        if getattr(self.cfg, "cast_params_once", False):
+            # Cast f32 master params to bf16 once, before the microbatch
+            # scan: the FSDP all-gathers then move bf16 (2x less wire) and
+            # are loop-invariant (hoisted out of the scan -> gathered once
+            # per step instead of once per microbatch).
+            def loss_bf16(params, batch):
+                pc = jax.tree_util.tree_map(
+                    lambda p: p.astype(jnp.bfloat16)
+                    if p.dtype == jnp.float32 else p,
+                    params,
+                )
+                return self.loss(pc, batch)
+
+            vg = microbatched_value_and_grad(loss_bf16, n_micro)
+        else:
+            vg = microbatched_value_and_grad(self.loss, n_micro)
+
+        constrain = (
+            getattr(self.cfg, "constrain_grads", False)
+            and self.ctx.mesh is not None
+        )
+        logical = self.logical() if constrain else None
+
+        def step(params, opt_state, batch):
+            loss, grads = vg(params, batch)
+            if constrain:
+                from repro.sharding.rules import param_shardings
+
+                shard = param_shardings(self.ctx, grads, logical)
+                grads = jax.lax.with_sharding_constraint(grads, shard)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, {"loss": loss}
+
+        return step
+
+    # ------------------------------------------------------------- decode
+    def init_cache(self, batch: int, seq: int) -> Params:
+        cfg = self.cfg
+        dt = cdtype(cfg)
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            if cfg.attn_kind == "mla":
+                return {
+                    "ckv": jnp.zeros(
+                        (cfg.n_layers, batch, seq, cfg.kv_lora_rank), dt
+                    ),
+                    "krope": jnp.zeros(
+                        (cfg.n_layers, batch, seq, cfg.qk_rope_dim), dt
+                    ),
+                }
+            return {
+                "k": jnp.zeros(
+                    (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.d_head), dt
+                ),
+                "v": jnp.zeros(
+                    (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.d_head), dt
+                ),
+            }
+        if fam == "ssm":
+            st = ssm_mod.mamba2_init_state(cfg, batch, dt)
+            return jax.tree_util.tree_map(
+                lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st
+            )
+        if fam == "hybrid":
+            st = ssm_mod.mamba2_init_state(cfg, batch, dt)
+            n_groups = cfg.n_layers // cfg.attn_every
+            return {
+                "ssm": jax.tree_util.tree_map(
+                    lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st
+                ),
+                "k": jnp.zeros(
+                    (n_groups, batch, seq, cfg.n_kv_heads, cfg.d_head), dt
+                ),
+                "v": jnp.zeros(
+                    (n_groups, batch, seq, cfg.n_kv_heads, cfg.d_head), dt
+                ),
+            }
+        raise ValueError(fam)
+
+    def cache_logical(self) -> Params:
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            if cfg.attn_kind == "mla":
+                return {
+                    "ckv": L("layer", "cache_batch", "cache_seq", None),
+                    "krope": L("layer", "cache_batch", "cache_seq", None),
+                }
+            return {
+                "k": L("layer", "cache_batch", "cache_seq", "kv_heads", None),
+                "v": L("layer", "cache_batch", "cache_seq", "kv_heads", None),
+            }
+        if fam == "ssm":
+            return {
+                "h": L("layer", "cache_batch", "ssm_heads", None, None),
+                "conv": L("layer", "cache_batch", None, "mlp"),
+            }
+        if fam == "hybrid":
+            return {
+                "ssm": {
+                    "h": L("layer", "cache_batch", "ssm_heads", None, None),
+                    "conv": L("layer", "cache_batch", None, "mlp"),
+                },
+                "k": L("layer", "cache_batch", "cache_seq", "kv_heads", None),
+                "v": L("layer", "cache_batch", "cache_seq", "kv_heads", None),
+            }
+        raise ValueError(fam)
+
+    def decode_step(
+        self,
+        params: Params,
+        cache: Params,
+        token: jnp.ndarray,  # (B, 1) int32
+        cur_len: jnp.ndarray,  # scalar int32: tokens already in cache
+    ) -> Tuple[jnp.ndarray, Params]:
+        """One serving step: append token, attend, return (logits (B,V), cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        x = embed_tokens(params["embed"], token, cfg)  # (B,1,d)
+        positions = jnp.reshape(cur_len, (1,))
+        fam = cfg.family
+
+        if fam in ("dense", "vlm", "moe"):
+            x, cache = self._decode_attn_stack(params, x, cache, cur_len)
+        elif fam == "ssm":
+            def body(p_l, h, c_l):
+                h_in = norm_apply(cfg.norm, p_l["norm_in"], h)
+                out, c_new = ssm_mod.mamba2_decode_step(p_l, h_in, c_l, cfg)
+                return h + out, c_new
+
+            x, cache = blk.scan_decode_layers(
+                params["layers"], x, cache, body, unroll=ctx.unroll
+            )
+        elif fam == "hybrid":
+            x, cache = self._decode_hybrid(params, x, cache, cur_len)
+        x = norm_apply(cfg.norm, params["final_norm"], x)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", x, cast(params["embed"]["table"], cfg),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            logits = jnp.einsum(
+                "bsd,dv->bsv", x, cast(params["unembed"], cfg),
+                preferred_element_type=jnp.float32,
+            )
+        return logits[:, 0, :], cache
+
+    def _decode_attn_stack(self, params, x, cache, cur_len):
+        cfg, ctx = self.cfg, self.ctx
+        positions = jnp.reshape(cur_len, (1,))
+        kv_len = cur_len + 1
+
+        if cfg.attn_kind == "mla":
+            def body(p_l, h, c_l):
+                hn = norm_apply(cfg.norm, p_l["ln1"], h)
+                ckv_new, krope_new = attn.mla_latent(p_l["attn"], hn, positions, cfg)
+                ckv = jax.lax.dynamic_update_slice(
+                    c_l["ckv"], ckv_new, (0, cur_len, 0)
+                )
+                krope = jax.lax.dynamic_update_slice(
+                    c_l["krope"], krope_new, (0, cur_len, 0)
+                )
+                a = attn.mla_decode(p_l["attn"], hn, ckv, krope, kv_len, cfg)
+                h = h + a
+                h2 = norm_apply(cfg.norm, p_l["ln2"], h)
+                if "moe" in p_l:
+                    f, _ = moe_mod.moe_apply(p_l["moe"], h2, cfg, ctx)
+                else:
+                    from repro.models.common import mlp_apply
+                    f = mlp_apply(p_l["mlp"], h2, cfg.act, ctx)
+                return h + f, {"ckv": ckv, "krope": krope}
+
+            stacks = []
+            if cfg.first_dense_layers:
+                fd = cfg.first_dense_layers
+                c_dense = jax.tree_util.tree_map(lambda a: a[:fd], cache)
+                c_moe = jax.tree_util.tree_map(lambda a: a[fd:], cache)
+                x, c_dense = blk.scan_decode_layers(
+                    params["dense_layers"], x, c_dense, body, unroll=ctx.unroll
+                )
+                x, c_moe = blk.scan_decode_layers(
+                    params["layers"], x, c_moe, body, unroll=ctx.unroll
+                )
+                cache = jax.tree_util.tree_map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0), c_dense, c_moe
+                )
+            else:
+                x, cache = blk.scan_decode_layers(
+                    params["layers"], x, cache, body, unroll=ctx.unroll
+                )
+            return x, cache
+
+        # GQA path (dense / vlm / moe-with-gqa)
+        win_l = None
+        if cfg.global_every > 0 and cfg.window is not None:
+            win_l, theta_l = self._gemma_scan_arrays(cache["k"].shape[2])
+
+        def body(p_l, h, c_l, *scal):
+            window = scal[0] if scal else (cfg.window or None)
+            theta = scal[1] if len(scal) > 1 else cfg.rope_theta
+            cfg_l = blk._with_theta(cfg, theta)
+            hn = norm_apply(cfg.norm, p_l["ln1"], h)
+            k_new, v_new = attn.gqa_kv_for_cache(p_l["attn"], hn, positions, cfg_l)
+            k = jax.lax.dynamic_update_slice(c_l["k"], k_new, (0, cur_len, 0, 0))
+            v = jax.lax.dynamic_update_slice(c_l["v"], v_new, (0, cur_len, 0, 0))
+            a = attn.gqa_decode(p_l["attn"], hn, k, v, kv_len, cfg_l, window=window)
+            h = h + a
+            h2 = norm_apply(cfg.norm, p_l["ln2"], h)
+            if "moe" in p_l:
+                f, _ = moe_mod.moe_apply(p_l["moe"], h2, cfg, ctx)
+            else:
+                from repro.models.common import mlp_apply
+                f = mlp_apply(p_l["mlp"], h2, cfg.act, ctx)
+            return h + f, {"k": k, "v": v}
+
+        per_layer = (win_l, theta_l) if win_l is not None else None
+        if cfg.family == "moe" and cfg.first_dense_layers:
+            fd = cfg.first_dense_layers
+            c_dense = jax.tree_util.tree_map(lambda a: a[:fd], cache)
+            c_moe = jax.tree_util.tree_map(lambda a: a[fd:], cache)
+            x, c_dense = blk.scan_decode_layers(
+                params["dense_layers"], x, c_dense, body, unroll=ctx.unroll
+            )
+            x, c_moe = blk.scan_decode_layers(
+                params["layers"], x, c_moe, body, unroll=ctx.unroll
+            )
+            cache = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), c_dense, c_moe
+            )
+            return x, cache
+        x, cache = blk.scan_decode_layers(
+            params["layers"], x, cache, body, per_layer=per_layer,
+            unroll=ctx.unroll,
+        )
+        return x, cache
+
+    def _decode_hybrid(self, params, x, cache, cur_len):
+        cfg, ctx = self.cfg, self.ctx
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        positions = jnp.reshape(cur_len, (1,))
+        kv_len = cur_len + 1
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, per) + a.shape[1:]), params["layers"]
+        )
+        ssm_cache = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, per) + a.shape[1:]), cache["ssm"]
+        )
+        shared = params["shared_attn"]
+
+        def mamba_body(p_l, h, c_l):
+            h_in = norm_apply(cfg.norm, p_l["norm_in"], h)
+            out, c_new = ssm_mod.mamba2_decode_step(p_l, h_in, c_l, cfg)
+            return h + out, c_new
+
+        def group_body(p_g, h, cg):
+            h, ssm_new = blk.scan_decode_layers(
+                p_g, h, cg["ssm"], mamba_body, unroll=ctx.unroll
+            )
+            hn = norm_apply(cfg.norm, shared["ln1"], h)
+            k_new, v_new = attn.gqa_kv_for_cache(shared["attn"], hn, positions, cfg)
+            k = jax.lax.dynamic_update_slice(cg["k"], k_new, (0, cur_len, 0, 0))
+            v = jax.lax.dynamic_update_slice(cg["v"], v_new, (0, cur_len, 0, 0))
+            a = attn.gqa_decode(shared["attn"], hn, k, v, kv_len, cfg)
+            h = h + a
+            h2 = norm_apply(cfg.norm, shared["ln2"], h)
+            from repro.models.common import mlp_apply
+            h = h + mlp_apply(shared["mlp"], h2, cfg.act, ctx)
+            return h, {"ssm": ssm_new, "k": k, "v": v}
+
+        caches_g = {"ssm": ssm_cache, "k": cache["k"], "v": cache["v"]}
+        x, new_cg = blk.scan_decode_layers(
+            stacked, x, caches_g, group_body, unroll=ctx.unroll
+        )
+        new_cache = {
+            "ssm": jax.tree_util.tree_map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_cg["ssm"]
+            ),
+            "k": new_cg["k"],
+            "v": new_cg["v"],
+        }
+        return x, new_cache
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, params: Params, batch: Dict) -> Tuple[jnp.ndarray, Params]:
+        """Full-sequence forward that also materializes the decode cache.
+
+        Returns (last-position logits (B, V), cache).  For attention archs
+        the cache holds roped k/v per layer; for SSM archs the final states.
+        """
+        cfg, ctx = self.cfg, self.ctx
+        x, positions = self._embed_inputs(params, batch)
+        fam = cfg.family
+        caches: Params
+
+        if fam in ("dense", "vlm", "moe"):
+            x, caches = self._prefill_attn_stack(params, x, positions)
+        elif fam == "ssm":
+            def scan_body(h, p_l):
+                h_in = norm_apply(cfg.norm, p_l["norm_in"], h)
+                out, state = ssm_mod.mamba2_forward(
+                    p_l, h_in, cfg, ctx, return_state=True
+                )
+                return h + out, state
+
+            x, caches = jax.lax.scan(
+                scan_body, x, params["layers"], unroll=True if ctx.unroll else 1
+            )
+        elif fam == "hybrid":
+            x, caches = self._prefill_hybrid(params, x, positions)
+        x = norm_apply(cfg.norm, params["final_norm"], x)
+        x_last = x[:, -1:, :]
+        if cfg.tie_embeddings:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", x_last, cast(params["embed"]["table"], cfg),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            logits = jnp.einsum(
+                "bsd,dv->bsv", x_last, cast(params["unembed"], cfg),
+                preferred_element_type=jnp.float32,
+            )
+        return logits[:, 0, :], caches
+
+    def _prefill_attn_stack(self, params, x, positions):
+        cfg, ctx = self.cfg, self.ctx
+
+        win_l = theta_l = None
+        if cfg.global_every > 0 and cfg.window is not None:
+            win_l, theta_l = self._gemma_scan_arrays(x.shape[1])
+
+        def body(p_l, h, *scal):
+            window = scal[0] if scal else (cfg.window or None)
+            theta = scal[1] if len(scal) > 1 else cfg.rope_theta
+            cfg_l = blk._with_theta(cfg, theta)
+            hn = norm_apply(cfg.norm, p_l["ln1"], h)
+            if cfg.attn_kind == "mla":
+                a = attn.mla_attention(p_l["attn"], hn, positions, cfg, ctx)
+                ckv, krope = attn.mla_latent(p_l["attn"], hn, positions, cfg)
+                kv = {"ckv": ckv, "krope": krope}
+            else:
+                a = attn.gqa_attention(
+                    p_l["attn"], hn, positions, cfg_l, ctx, causal=True,
+                    window=window,
+                )
+                k_c, v_c = attn.gqa_kv_for_cache(p_l["attn"], hn, positions, cfg_l)
+                kv = {"k": k_c, "v": v_c}
+            h = h + a
+            h2 = norm_apply(cfg.norm, p_l["ln2"], h)
+            if "moe" in p_l:
+                f, _ = moe_mod.moe_apply(p_l["moe"], h2, cfg, ctx)
+            else:
+                from repro.models.common import mlp_apply
+                f = mlp_apply(p_l["mlp"], h2, cfg.act, ctx)
+            return h + f, kv
+
+        def scan_with_cache(stacked, h, per_layer=None):
+            def step(carry, inp):
+                if per_layer is None:
+                    p_l = inp
+                    h_new, kv = body(p_l, carry)
+                else:
+                    p_l, *scal = inp
+                    h_new, kv = body(p_l, carry, *scal)
+                return h_new, kv
+
+            xs = stacked if per_layer is None else (stacked,) + tuple(per_layer)
+            return jax.lax.scan(step, h, xs, unroll=True if ctx.unroll else 1)
+
+        per_layer = (win_l, theta_l) if win_l is not None else None
+        if cfg.family == "moe" and cfg.first_dense_layers:
+            x, kv_d = scan_with_cache(params["dense_layers"], x)
+            x, kv_m = scan_with_cache(params["layers"], x)
+            caches = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), kv_d, kv_m
+            )
+        else:
+            x, caches = scan_with_cache(params["layers"], x, per_layer)
+        return x, caches
+
+    def _prefill_hybrid(self, params, x, positions):
+        cfg, ctx = self.cfg, self.ctx
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, per) + a.shape[1:]), params["layers"]
+        )
+        shared = params["shared_attn"]
+
+        def mamba_body(h, p_l):
+            h_in = norm_apply(cfg.norm, p_l["norm_in"], h)
+            out, state = ssm_mod.mamba2_forward(p_l, h_in, cfg, ctx, return_state=True)
+            return h + out, state
+
+        def group_body(h, p_g):
+            h, ssm_states = jax.lax.scan(
+                mamba_body, h, p_g, unroll=True if ctx.unroll else 1
+            )
+            hn = norm_apply(cfg.norm, shared["ln1"], h)
+            a = attn.gqa_attention(shared["attn"], hn, positions, cfg, ctx)
+            k_c, v_c = attn.gqa_kv_for_cache(shared["attn"], hn, positions, cfg)
+            h = h + a
+            h2 = norm_apply(cfg.norm, shared["ln2"], h)
+            from repro.models.common import mlp_apply
+            h = h + mlp_apply(shared["mlp"], h2, cfg.act, ctx)
+            return h, {"ssm": ssm_states, "k": k_c, "v": v_c}
+
+        x, out = jax.lax.scan(
+            group_body, x, stacked, unroll=True if ctx.unroll else 1
+        )
+        caches = {
+            "ssm": jax.tree_util.tree_map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), out["ssm"]
+            ),
+            "k": out["k"],
+            "v": out["v"],
+        }
+        return x, caches
+
+
+# ---------------------------------------------------------------- enc-dec
+class EncDecLM:
+    """Encoder-decoder (seamless-m4t): frame-embedding encoder + text decoder."""
+
+    def __init__(self, cfg, ctx: Optional[ShardCtx] = None):
+        self.cfg = cfg
+        self.ctx = ctx if ctx is not None else ShardCtx()
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_e, k_enc, k_dec, k_u = jax.random.split(key, 4)
+        return {
+            "embed": {"table": embed_init(k_e, (cfg.vocab_size, cfg.d_model))},
+            "enc_layers": blk.stack_init(
+                k_enc, cfg, cfg.n_layers,
+                lambda k: blk.tf_block_init(k, cfg, use_moe=False),
+            ),
+            "dec_layers": blk.stack_init(
+                k_dec, cfg, cfg.n_dec_layers,
+                lambda k: blk.tf_block_init(k, cfg, use_moe=False, cross=True),
+            ),
+            "enc_norm": norm_init(cfg.norm, cfg.d_model),
+            "final_norm": norm_init(cfg.norm, cfg.d_model),
+            "unembed": dense_init(k_u, (cfg.d_model, cfg.vocab_size)),
+        }
+
+    def logical(self) -> Params:
+        cfg = self.cfg
+
+        def stacked(tree):
+            return jax.tree_util.tree_map(
+                lambda l: L("layer", *l.names), tree,
+                is_leaf=lambda x: isinstance(x, L),
+            )
+
+        return {
+            "embed": {"table": L("vocab", "d_fsdp")},
+            "enc_layers": stacked(blk.tf_block_logical(cfg, use_moe=False)),
+            "dec_layers": stacked(blk.tf_block_logical(cfg, use_moe=False, cross=True)),
+            "enc_norm": norm_logical(cfg.norm),
+            "final_norm": norm_logical(cfg.norm),
+            "unembed": L("d_fsdp", "vocab"),
+        }
+
+    def encode(self, params, enc_embeds: jnp.ndarray) -> jnp.ndarray:
+        cfg, ctx = self.cfg, self.ctx
+        x = ctx.cs(cast(enc_embeds, cfg), "batch", "seq", None)
+        positions = jnp.arange(x.shape[1])
+
+        def body(p_l, h):
+            return blk.tf_block_apply(
+                p_l, h, positions, cfg, ctx, causal=False, use_moe=False
+            )
+
+        x, _ = blk.scan_layers(
+            params["enc_layers"], x, body, remat=cfg.remat, unroll=ctx.unroll
+        )
+        return norm_apply(cfg.norm, params["enc_norm"], x)
+
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        cfg, ctx = self.cfg, self.ctx
+        enc = self.encode(params, batch["enc_embeds"])
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        positions = jnp.arange(x.shape[1])
+
+        def body(p_l, h):
+            return blk.tf_block_apply(
+                p_l, h, positions, cfg, ctx, causal=True, use_moe=False, enc=enc
+            )
+
+        x, _ = blk.scan_layers(
+            params["dec_layers"], x, body, remat=cfg.remat, unroll=ctx.unroll
+        )
+        x = norm_apply(cfg.norm, params["final_norm"], x)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, cast(params["unembed"], cfg),
+            preferred_element_type=jnp.float32,
+        )
+        return ctx.cs(logits, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        logits, _ = self.forward(params, batch)
+        return _xent(
+            logits, batch["labels"],
+            sharded=getattr(self.cfg, "sharded_xent", False),
+        )
+
+    def make_train_step(self, optimizer, n_micro: Optional[int] = None):
+        from repro.optim.accumulation import microbatched_value_and_grad
+        from repro.optim.adamw import apply_updates
+
+        n_micro = n_micro if n_micro is not None else self.cfg.n_micro
+        vg = microbatched_value_and_grad(self.loss, n_micro)
+
+        def step(params, opt_state, batch):
+            loss, grads = vg(params, batch)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, {"loss": loss}
+
+        return step
+
+    # decode: self-attn cache + precomputed cross k/v per layer
+    def init_cache(self, batch: int, seq: int, enc_seq: int) -> Params:
+        cfg = self.cfg
+        dt = cdtype(cfg)
+        kh, dh = cfg.n_kv_heads, cfg.d_head
+        ld = cfg.n_dec_layers
+        return {
+            "k": jnp.zeros((ld, batch, seq, kh, dh), dt),
+            "v": jnp.zeros((ld, batch, seq, kh, dh), dt),
+            "xk": jnp.zeros((ld, batch, enc_seq, kh, dh), dt),
+            "xv": jnp.zeros((ld, batch, enc_seq, kh, dh), dt),
+        }
+
+    def cache_logical(self) -> Params:
+        return {
+            "k": L("layer", "cache_batch", "cache_seq", "kv_heads", None),
+            "v": L("layer", "cache_batch", "cache_seq", "kv_heads", None),
+            "xk": L("layer", "cache_batch", "cache_seq", "kv_heads", None),
+            "xv": L("layer", "cache_batch", "cache_seq", "kv_heads", None),
+        }
+
+    def prefill(self, params, batch) -> Tuple[jnp.ndarray, Params]:
+        """Encode the source, run the decoder prefix, build all caches
+        (self roped k/v per position + per-layer cross k/v from the encoder).
+        Returns (last-position logits (B,V), cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        enc = self.encode(params, batch["enc_embeds"])
+        x = embed_tokens(params["embed"], batch["tokens"], cfg)
+        positions = jnp.arange(x.shape[1])
+
+        def body(h, p_l):
+            hn = norm_apply(cfg.norm, p_l["ln1"], h)
+            a = attn.gqa_attention(p_l["attn"], hn, positions, cfg, ctx, causal=True)
+            k_c, v_c = attn.gqa_kv_for_cache(p_l["attn"], hn, positions, cfg)
+            h = h + a
+            hx = norm_apply(cfg.norm, p_l["ln_x"], h)
+            h = h + attn.cross_attention(p_l["xattn"], hx, enc, cfg, ctx)
+            dt = h.dtype
+            xk = jnp.einsum("bsd,dhk->bshk", enc, p_l["xattn"]["wk"].astype(dt))
+            xv = jnp.einsum("bsd,dhk->bshk", enc, p_l["xattn"]["wv"].astype(dt))
+            h2 = norm_apply(cfg.norm, p_l["ln2"], h)
+            from repro.models.common import mlp_apply
+            h = h + mlp_apply(p_l["mlp"], h2, cfg.act, ctx)
+            return h, {"k": k_c, "v": v_c, "xk": xk, "xv": xv}
+
+        x, cache = jax.lax.scan(
+            body, x, params["dec_layers"], unroll=True if ctx.unroll else 1
+        )
+        x = norm_apply(cfg.norm, params["final_norm"], x)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x[:, -1:, :], cast(params["unembed"], cfg),
+            preferred_element_type=jnp.float32,
+        )
+        return logits[:, 0, :], cache
+
+    def decode_step(self, params, cache, token, cur_len):
+        cfg, ctx = self.cfg, self.ctx
+        x = embed_tokens(params["embed"], token, cfg)
+        positions = jnp.reshape(cur_len, (1,))
+        kv_len = cur_len + 1
+        enc_len = cache["xk"].shape[2]
+
+        def body(p_l, h, c_l):
+            hn = norm_apply(cfg.norm, p_l["ln1"], h)
+            k_new, v_new = attn.gqa_kv_for_cache(p_l["attn"], hn, positions, cfg)
+            k = jax.lax.dynamic_update_slice(c_l["k"], k_new, (0, cur_len, 0, 0))
+            v = jax.lax.dynamic_update_slice(c_l["v"], v_new, (0, cur_len, 0, 0))
+            h = h + attn.gqa_decode(p_l["attn"], hn, k, v, kv_len, cfg)
+            # cross attention against the fixed encoder kv
+            hx = norm_apply(cfg.norm, p_l["ln_x"], h)
+            qx, _, _ = attn.gqa_qkv(p_l["xattn"], hx, positions, cfg, rope=False)
+            a = attn.decode_attention(
+                qx, c_l["xk"], c_l["xv"], jnp.asarray(enc_len, jnp.int32)
+            )
+            h = h + attn.gqa_out(p_l["xattn"], a, cfg)
+            h2 = norm_apply(cfg.norm, p_l["ln2"], h)
+            from repro.models.common import mlp_apply
+            h = h + mlp_apply(p_l["mlp"], h2, cfg.act, ctx)
+            return h, {"k": k, "v": v, "xk": c_l["xk"], "xv": c_l["xv"]}
+
+        x, cache = blk.scan_decode_layers(
+            params["dec_layers"], x, cache, body, unroll=ctx.unroll
+        )
+        x = norm_apply(cfg.norm, params["final_norm"], x)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, cast(params["unembed"], cfg),
+            preferred_element_type=jnp.float32,
+        )
+        return logits[:, 0, :], cache
+
+
+def build_model(cfg, ctx: Optional[ShardCtx] = None):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, ctx)
+    return CausalLM(cfg, ctx)

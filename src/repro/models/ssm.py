@@ -1,0 +1,290 @@
+"""Mamba-2 (SSD — state-space duality) blocks, chunked + decode paths.
+
+The SSD algorithm (Dao & Gu, arXiv:2405.21060) computes the selective-SSM
+recurrence as block matrices: within a chunk of length Q the output is a
+masked (decay-weighted) attention-like quadratic form; across chunks a small
+(H, P, N) state is carried by a linear recurrence.  We implement the
+inter-chunk recurrence with ``lax.scan`` so the HLO is O(1) in sequence
+length (long_500k prefill scans 2048 chunks with one compiled body).
+
+Decode is the dual recurrent view: constant-memory state update per token —
+the reason the long_500k cell is *only* runnable for SSM/hybrid archs.
+
+TPU notes: the quadratic intra-chunk term is (Q x Q) per head with Q=256 —
+MXU-shaped; the head axis shards over `model` ("ssm_heads"), states stay
+local to their head shard so no collectives appear inside the scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, rmsnorm
+from repro.sharding.rules import L, ShardCtx
+
+
+# ------------------------------------------------------------------ params
+def mamba2_init(key, cfg) -> Params:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    h = d_in // cfg.ssm_head_dim
+    gn = cfg.ssm_groups * cfg.ssm_state
+    ks = jax.random.split(key, 9)
+    return {
+        "wz": dense_init(ks[0], (d, d_in)),
+        "wx": dense_init(ks[1], (d, d_in)),
+        "wB": dense_init(ks[2], (d, gn)),
+        "wC": dense_init(ks[3], (d, gn)),
+        "wdt": dense_init(ks[4], (d, h)),
+        "conv_w": 0.1 * jax.random.normal(ks[5], (cfg.ssm_conv, d_in + 2 * gn)),
+        "conv_b": jnp.zeros((d_in + 2 * gn,)),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[6], (h,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((h,)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[7], (h,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1)))
+        )),
+        "norm": {"scale": jnp.ones((d_in,))},
+        "norm_in": {"scale": jnp.ones((d,))},
+        "out": dense_init(ks[8], (d_in, d)),
+    }
+
+
+def mamba2_logical(cfg) -> Params:
+    return {
+        "wz": L("d_fsdp", "mlp"),
+        "wx": L("d_fsdp", "mlp"),
+        "wB": L("d_fsdp", None),
+        "wC": L("d_fsdp", None),
+        "wdt": L("d_fsdp", "ssm_heads"),
+        "conv_w": L(None, "mlp"),
+        "conv_b": L("mlp"),
+        "A_log": L("ssm_heads"),
+        "D": L("ssm_heads"),
+        "dt_bias": L("ssm_heads"),
+        "norm": {"scale": L("mlp")},
+        "norm_in": {"scale": L("embed")},
+        "out": L("mlp", "d_fsdp"),
+    }
+
+
+# ----------------------------------------------------------------- helpers
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b[None, None, :]
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """(..., Q) log-decays -> (..., Q, Q) lower-tri cumulative segment sums."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,   # (B, S, H, P) — dt-scaled inputs
+    a: jnp.ndarray,   # (B, S, H)    — per-step log decay (A * dt, <= 0)
+    bmat: jnp.ndarray,  # (B, S, G, N)
+    cmat: jnp.ndarray,  # (B, S, G, N)
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,  # (B, H, P, N) initial state
+    unroll: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)).  G must divide H."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    # Pad ragged tails with identity steps: x=B=C=0 leaves the state
+    # untouched (decay a=0 -> factor 1), so h_last is exact; padded y rows
+    # are sliced off.
+    s_real = s
+    if s % chunk != 0:
+        s_p = -(-s // chunk) * chunk
+        pad = s_p - s
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s_p
+    nc = s // chunk
+    rep = h // g
+
+    def blocked(t, feat_shape):
+        return t.reshape((b, nc, chunk) + feat_shape)
+
+    xb = blocked(x, (h, p))
+    ab = blocked(a, (h,)).astype(jnp.float32)
+    bb = blocked(bmat, (g, n))
+    cb = blocked(cmat, (g, n))
+    # Broadcast groups to heads.
+    bb_h = jnp.repeat(bb, rep, axis=3) if g != h else bb
+    cb_h = jnp.repeat(cb, rep, axis=3) if g != h else cb
+
+    a_cum = jnp.cumsum(ab, axis=2)  # (B, nc, Q, H)
+    # Intra-chunk (diagonal block) term: decay matrix L then masked attention.
+    lmat = jnp.exp(_segsum(jnp.moveaxis(ab, -1, -2)))  # (B, nc, H, Q, Q)
+    scores = jnp.einsum(
+        "bcqhn,bcshn->bchqs", cb_h, bb_h, preferred_element_type=jnp.float32
+    )
+    y_diag = jnp.einsum(
+        "bchqs,bcshp->bcqhp", (scores * lmat).astype(x.dtype), xb,
+        preferred_element_type=jnp.float32,
+    )
+
+    # Chunk-final states: sum_s exp(A_cum_end - A_cum_s) * B_s x_s.
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B, nc, Q, H)
+    states = jnp.einsum(
+        "bcshn,bcsh,bcshp->bchpn", bb_h, decay_to_end.astype(x.dtype), xb,
+        preferred_element_type=jnp.float32,
+    )  # (B, nc, H, P, N)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (B, nc, H)
+
+    def carry_fn(hprev, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h_init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    h_last, h_prevs = jax.lax.scan(
+        carry_fn,
+        h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=True if unroll else 1,
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B, nc, H, P, N) state entering chunk
+
+    # Inter-chunk (off-diagonal) term: y += C_t exp(A_cum_t) h_chunk_start.
+    in_decay = jnp.exp(a_cum)  # (B, nc, Q, H)
+    y_off = jnp.einsum(
+        "bcqhn,bcqh,bchpn->bcqhp", cb_h, in_decay.astype(x.dtype),
+        h_prevs.astype(x.dtype), preferred_element_type=jnp.float32,
+    )
+    y = (y_diag + y_off).astype(x.dtype).reshape(b, s, h, p)
+    return y[:, :s_real], h_last
+
+
+# ------------------------------------------------------------------- block
+def mamba2_forward(
+    params: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    ctx: ShardCtx,
+    h0: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    """Full Mamba-2 mixer: proj -> conv -> SSD -> gated norm -> out proj."""
+    dt_ = x.dtype
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    h = d_in // cfg.ssm_head_dim
+    p = cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(dt_))
+    xi = jnp.einsum("bsd,de->bse", x, params["wx"].astype(dt_))
+    bm = jnp.einsum("bsd,de->bse", x, params["wB"].astype(dt_))
+    cm = jnp.einsum("bsd,de->bse", x, params["wC"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(dt_))
+
+    xbc_raw = jnp.concatenate([xi, bm, cm], axis=-1)
+    xbc = jax.nn.silu(
+        _causal_conv(
+            xbc_raw, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_)
+        )
+    )
+    xi = xbc[..., :d_in].reshape(b, s, h, p)
+    bm = xbc[..., d_in : d_in + g * n].reshape(b, s, g, n)
+    cm = xbc[..., d_in + g * n :].reshape(b, s, g, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])[None, None, :] * dt  # log decay <= 0
+    x_scaled = (xi.astype(jnp.float32) * dt[..., None]).astype(dt_)
+
+    xi_c = ctx.cs(xi, "batch", "seq", "ssm_heads", None)
+    y, h_last = ssd_chunked(
+        ctx.cs(x_scaled, "batch", "seq", "ssm_heads", None),
+        a, bm, cm, min(cfg.ssm_chunk, s), h0=h0, unroll=ctx.unroll,
+    )
+    y = y + params["D"].astype(dt_)[None, None, :, None] * xi_c
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, params["out"].astype(dt_))
+    if return_state:
+        k = params["conv_w"].shape[0]
+        tail = xbc_raw[:, -(k - 1):, :]  # decode conv history (raw, pre-act)
+        return out, {"h": h_last, "conv": tail}
+    return out
+
+
+def mamba2_decode_step(
+    params: Params,
+    x: jnp.ndarray,  # (B, 1, d)
+    state: Dict[str, jnp.ndarray],  # {"h": (B,H,P,N), "conv": (B,K-1,C)}
+    cfg,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token recurrent update (constant memory in context length)."""
+    dt_ = x.dtype
+    b, _, d = x.shape
+    d_in = cfg.ssm_expand * d
+    h = d_in // cfg.ssm_head_dim
+    p = cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(dt_))[:, 0]
+    xi = jnp.einsum("bsd,de->bse", x, params["wx"].astype(dt_))
+    bm = jnp.einsum("bsd,de->bse", x, params["wB"].astype(dt_))
+    cm = jnp.einsum("bsd,de->bse", x, params["wC"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(dt_))[:, 0]
+
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)[:, 0]  # (B, C)
+    conv_hist = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)
+    k = params["conv_w"].shape[0]
+    w = params["conv_w"].astype(dt_)
+    conv_out = (
+        jnp.sum(conv_hist * w[None], axis=1) + params["conv_b"].astype(dt_)
+    )
+    xbc_act = jax.nn.silu(conv_out)
+    xi1 = xbc_act[:, :d_in].reshape(b, h, p)
+    bm1 = xbc_act[:, d_in : d_in + g * n].reshape(b, g, n)
+    cm1 = xbc_act[:, d_in + g * n :].reshape(b, g, n)
+    rep = h // g
+    bm_h = jnp.repeat(bm1, rep, axis=1) if g != h else bm1
+    cm_h = jnp.repeat(cm1, rep, axis=1) if g != h else cm1
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    decay = jnp.exp(-jnp.exp(params["A_log"])[None] * dt)  # (B,H)
+    h_new = state["h"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xi1.astype(jnp.float32), bm_h.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h_new.astype(dt_), cm_h)
+    y = y + params["D"].astype(dt_)[None, :, None] * xi1
+    y = y.reshape(b, d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = jnp.einsum("be,ed->bd", y, params["out"].astype(dt_))[:, None, :]
+    new_state = {"h": h_new, "conv": conv_hist[:, 1:]}
+    return out, new_state
+
+
+def mamba2_init_state(cfg, batch: int, dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = d_in // cfg.ssm_head_dim
+    gn = cfg.ssm_groups * cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in + 2 * gn), dtype),
+    }

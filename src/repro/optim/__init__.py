@@ -1,0 +1,15 @@
+# Optimizer substrate: from-scratch AdamW/SGD (no optax in the container),
+# LR schedules, microbatched grad accumulation, and the distributed-
+# optimization tricks (top-k + error-feedback compression, int8 all-reduce).
+from repro.optim import adamw, sgd, schedules, compression, accumulation
+from repro.optim.adamw import AdamW, AdamWState, apply_updates
+from repro.optim.sgd import SGD, SGDState
+from repro.optim.schedules import constant, warmup_cosine, warmup_linear
+from repro.optim.accumulation import microbatched_value_and_grad
+
+__all__ = [
+    "adamw", "sgd", "schedules", "compression", "accumulation",
+    "AdamW", "AdamWState", "apply_updates", "SGD", "SGDState",
+    "constant", "warmup_cosine", "warmup_linear",
+    "microbatched_value_and_grad",
+]

@@ -1,0 +1,52 @@
+"""Gradient accumulation (microbatching) — the standard memory/roofline lever
+for the train_4k cells: loss over global_batch=256 is accumulated over
+`n_micro` sequential microbatches inside one jitted step via lax.scan, so the
+activation working set scales with the microbatch, not the global batch."""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def microbatched_value_and_grad(
+    loss_fn: Callable,
+    n_micro: int,
+) -> Callable:
+    """Wrap loss_fn(params, batch) -> scalar into an accumulated grad fn.
+
+    batch: pytree whose leaves have a leading global-batch axis divisible by
+    n_micro.  Returns fn(params, batch) -> (mean_loss, mean_grads).  Uses
+    lax.scan so the HLO stays O(1) in n_micro (compile-time critical for the
+    dry-run).
+    """
+    if n_micro <= 1:
+        vg = jax.value_and_grad(loss_fn)
+        return lambda p, b: vg(p, b)
+
+    def split(b):
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]), b
+        )
+
+    def fn(params, batch):
+        micro = split(batch)
+        vg = jax.value_and_grad(loss_fn)
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, grads = vg(params, mb)
+            grad_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), grad_acc, grads
+            )
+            return (loss_acc + loss, grad_acc), None
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss_sum, grad_sum), _ = jax.lax.scan(body, (0.0, zero), micro)
+        inv = 1.0 / n_micro
+        return loss_sum * inv, jax.tree_util.tree_map(lambda g: g * inv, grad_sum)
+
+    return fn

@@ -1,0 +1,107 @@
+"""Gradient compression for data-parallel all-reduce at 1000+ node scale.
+
+Two schemes, both with the memory/bandwidth math that motivates them at pod
+scale (ICI ~50 GB/s/link vs HBM 819 GB/s — DP all-reduce of full f32 grads
+is the classic scaling wall):
+
+* **Top-k sparsification with error feedback** (Lin et al., Deep Gradient
+  Compression): keep the k largest-|g| entries per tensor, accumulate the
+  residual locally and add it back next step.  Volume drops by ~dim/k.
+  All-reduce of sparse (idx, val) pairs is emulated by scatter -> dense
+  psum -> (values already dense) because TPU collectives are dense; the
+  *wire volume model* is still recorded so the roofline collective term can
+  be compared.  On real hardware one would all-gather (idx, val) pairs.
+
+* **Int8 quantized all-reduce**: per-tensor symmetric scale, round-to-nearest
+  stochastic-free; psum in int32 then dequantize.  4x volume reduction with
+  unbiased-enough error for EWMA/Adam-smoothed training.
+
+Both are pure functions usable inside shard_map (they call jax.lax collectives
+when `axis` is given) or standalone (axis=None -> local, for tests).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # pytree matching grads
+
+
+def init_error_feedback(grads_like) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like
+        )
+    )
+
+
+def _topk_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask of the k largest-|x| entries (flattened)."""
+    flat = jnp.abs(x.reshape(-1))
+    k = min(k, flat.shape[0])
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def topk_compress_allreduce(
+    grads,
+    ef: ErrorFeedbackState,
+    k_fraction: float = 0.01,
+    axes: Optional[Union[str, Sequence[str]]] = None,
+) -> Tuple[Any, ErrorFeedbackState, float]:
+    """Top-k + error feedback; returns (mean grads, new state, wire_fraction).
+
+    wire_fraction is the modeled collective-volume ratio vs dense f32
+    all-reduce ((idx int32 + val f32) * k vs dim * f32) for the roofline
+    collective term.
+    """
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        k = max(1, int(k_fraction * g32.size))
+        mask = _topk_mask(g32, k)
+        sent = g32 * mask
+        new_r = g32 - sent
+        if axes is not None:
+            sent = jax.lax.pmean(sent, axes)
+        return sent.astype(g.dtype), new_r
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    wire_fraction = 2.0 * k_fraction  # (4B idx + 4B val) per kept vs 4B per dense
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        ErrorFeedbackState(residual=treedef.unflatten([o[1] for o in out])),
+        wire_fraction,
+    )
+
+
+def int8_allreduce(
+    grads, axes: Optional[Union[str, Sequence[str]]] = None
+) -> Tuple[Any, float]:
+    """Symmetric per-tensor int8 quantize -> psum(int32) -> dequantize.
+
+    Returns (mean grads, wire_fraction=0.25).  The scale itself is maxed
+    across shards first so quantization grids agree.
+    """
+
+    def one(g):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-12
+        if axes is not None:
+            scale = jax.lax.pmax(scale, axes)
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        if axes is not None:
+            tot = jax.lax.psum(q.astype(jnp.int32), axes)
+            n = jax.lax.psum(jnp.ones((), jnp.int32), axes)
+            return (tot.astype(jnp.float32) * scale / n.astype(jnp.float32)).astype(
+                g.dtype
+            )
+        return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+    return jax.tree_util.tree_map(one, grads), 0.25

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (warmup + cosine/linear decay, constant)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    """Linear warmup to `peak` then cosine decay to `floor` — the standard
+    LM-pretraining schedule used by every assigned architecture."""
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup_steps)
+        t = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def warmup_linear(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup_steps)
+        t = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        t = jnp.clip(t, 0.0, 1.0)
+        lin = peak + (floor - peak) * t
+        return jnp.where(step < warmup_steps, warm, lin)
+
+    return sched

@@ -1,0 +1,53 @@
+"""SGD with (Nesterov) momentum — the baseline optimizer the paper's PyTorch
+comparison uses, and the cheap option for the supervised BCPNN readout."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    learning_rate: Union[float, Schedule] = 1e-2
+    momentum: float = 0.9
+    nesterov: bool = False
+    weight_decay: float = 0.0
+
+    def init(self, params) -> SGDState:
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ),
+        )
+
+    def update(self, grads, state: SGDState, params):
+        step = state.step + 1
+        lr = self.learning_rate(step) if callable(self.learning_rate) else self.learning_rate
+
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32)
+            if self.weight_decay:
+                g32 = g32 + self.weight_decay * p.astype(jnp.float32)
+            m = self.momentum * m + g32
+            d = g32 + self.momentum * m if self.nesterov else m
+            return (-lr * d).astype(p.dtype), m
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.momentum)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (
+            treedef.unflatten([o[0] for o in out]),
+            SGDState(step=step, momentum=treedef.unflatten([o[1] for o in out])),
+        )

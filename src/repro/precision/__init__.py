@@ -1,0 +1,13 @@
+# Variable-precision (BF14..BF28) datapath emulation — the TPU-native
+# realization of the paper's FPGA FloPoCo study (Sec. 4.2 / Fig. 3).
+from repro.precision.formats import BFFormat, FORMATS, get_format, round_to
+from repro.precision.policy import (
+    PrecisionPolicy,
+    quantized_forward,
+    quantized_learning_cycle,
+)
+
+__all__ = [
+    "BFFormat", "FORMATS", "get_format", "round_to",
+    "PrecisionPolicy", "quantized_forward", "quantized_learning_cycle",
+]

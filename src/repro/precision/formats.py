@@ -1,0 +1,65 @@
+"""Variable-precision bfloat formats (the paper's FPGA FloPoCo study).
+
+The paper synthesizes IEEE-754-derived FPUs with an 8-bit exponent and a
+reduced mantissa: BF14..BF28 where the total width n gives mantissa n-9
+(sign + 8-bit exponent + mantissa).  BF16 (7-bit mantissa) is exactly the
+Google-TPU bfloat16; BF14/BF15 are below it; BF20/24/28 above.  Paper
+finding (Fig. 3): BF14 -> chance accuracy, BF15 -> ~67%, BF16 -> ~-4%,
+BF20+ -> indistinguishable from f32.  We reproduce that sweep with RNE
+mantissa-truncation emulation (see repro.kernels.bf_round).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class BFFormat:
+    name: str
+    total_bits: int
+
+    @property
+    def mantissa_bits(self) -> int:
+        # sign(1) + exponent(8) + mantissa
+        return self.total_bits - 9
+
+    @property
+    def is_identity(self) -> bool:
+        return self.mantissa_bits >= 23
+
+
+FORMATS: Dict[str, BFFormat] = {
+    f.name: f
+    for f in [
+        BFFormat("bf14", 14),
+        BFFormat("bf15", 15),
+        BFFormat("bf16", 16),
+        BFFormat("bf20", 20),
+        BFFormat("bf24", 24),
+        BFFormat("bf28", 28),
+        BFFormat("fp32", 32),
+    ]
+}
+
+
+def get_format(name: str) -> BFFormat:
+    try:
+        return FORMATS[name.lower()]
+    except KeyError:
+        raise ValueError(f"unknown format {name!r}; have {sorted(FORMATS)}")
+
+
+def round_to(x: jnp.ndarray, fmt: BFFormat, use_kernel: bool = True) -> jnp.ndarray:
+    """Round f32 array to the format's mantissa width (RNE)."""
+    if fmt.is_identity:
+        return x.astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels import ops
+
+        return ops.bf_round(x, fmt.mantissa_bits)
+    from repro.kernels import ref
+
+    return ref.bf_round(x, fmt.mantissa_bits)

@@ -1,0 +1,97 @@
+"""Reduced-precision BCPNN datapath emulation.
+
+The paper's FPGA varies *every* floating-point operator (add/sub/mul/div/log
+— "not only multiply-accumulate as in NVIDIA Tensorcore or Google TPU").  We
+emulate that datapath by rounding to the target format at every algebraic
+stage boundary of Alg. 1:
+
+    support   s   = round(x @ w + b)
+    softmax   a_j = round(softmax_HCU(s))
+    means     m_* = round(<a>)                (the GEMM output)
+    EWMA      C_* = round((1-λ)C + λ m)
+    weights   w   = round(log C_ij - log C_i - log C_j)
+    bias      b   = round(k_B log C_j)
+
+Rounding *between* stages rather than per-scalar-op is the standard software
+emulation fidelity (each stage is one fused hardware pipeline on the FPGA);
+EXPERIMENTS.md §Validation/precision shows it reproduces the paper's
+accuracy cliff (BF14 chance / BF15 partial / BF16 ~ -4% / BF20+ clean).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.learning import EPS, MarginalState
+from repro.core.units import UnitLayout
+from repro.precision.formats import BFFormat, get_format, round_to
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Which format each datapath stage runs in (uniform by default)."""
+
+    fmt: BFFormat
+    use_kernel: bool = True
+
+    @classmethod
+    def named(cls, name: str, use_kernel: bool = True) -> "PrecisionPolicy":
+        return cls(fmt=get_format(name), use_kernel=use_kernel)
+
+    def q(self, x: jnp.ndarray) -> jnp.ndarray:
+        return round_to(x, self.fmt, use_kernel=self.use_kernel)
+
+
+def quantized_forward(
+    ai: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    layout: UnitLayout,
+    policy: PrecisionPolicy,
+    mask: Optional[jnp.ndarray] = None,
+    gain: float = 1.0,
+) -> jnp.ndarray:
+    weff = policy.q(w * mask) if mask is not None else policy.q(w)
+    s = policy.q(policy.q(ai) @ weff + policy.q(b))
+    if gain != 1.0:
+        s = policy.q(s * gain)
+    blocked = layout.blocked(s)
+    out = jax.nn.softmax(blocked, axis=-1)
+    return policy.q(layout.flat(out))
+
+
+def quantized_learning_cycle(
+    state: MarginalState,
+    ai: jnp.ndarray,
+    aj: jnp.ndarray,
+    lam: float,
+    policy: PrecisionPolicy,
+    k_b: float = 1.0,
+    mask: Optional[jnp.ndarray] = None,
+) -> Tuple[MarginalState, jnp.ndarray, jnp.ndarray]:
+    b_sz = ai.shape[0]
+    ai_q = policy.q(ai)
+    aj_q = policy.q(aj)
+    mi = policy.q(jnp.mean(ai_q, axis=0))
+    mj = policy.q(jnp.mean(aj_q, axis=0))
+    mij = policy.q(
+        jnp.einsum("bi,bj->ij", ai_q, aj_q, preferred_element_type=jnp.float32)
+        / b_sz
+    )
+    one_m = 1.0 - lam
+    ci = policy.q(one_m * state.ci + lam * mi)
+    cj = policy.q(one_m * state.cj + lam * mj)
+    cij = policy.q(one_m * state.cij + lam * mij)
+    new_state = MarginalState(ci=ci, cj=cj, cij=cij)
+    w = policy.q(
+        jnp.log(jnp.maximum(cij, EPS))
+        - jnp.log(jnp.maximum(ci, EPS))[:, None]
+        - jnp.log(jnp.maximum(cj, EPS))[None, :]
+    )
+    if mask is not None:
+        w = w * mask
+    bias = policy.q(k_b * jnp.log(jnp.maximum(cj, EPS)))
+    return new_state, w, bias

@@ -1,0 +1,9 @@
+# Runtime: fault-tolerant training loop (checkpoint/restart, stragglers,
+# elastic restore) + batched serving loop (continuous slot reuse).
+from repro.runtime.train_loop import TrainLoopConfig, TrainLoopResult, train_loop
+from repro.runtime.serve_loop import Completion, Request, ServeSession
+
+__all__ = [
+    "TrainLoopConfig", "TrainLoopResult", "train_loop",
+    "Completion", "Request", "ServeSession",
+]

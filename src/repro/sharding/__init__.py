@@ -1,0 +1,5 @@
+# PartitionSpec rule engine: logical axis names -> mesh axes with
+# divisibility fallback (DP/FSDP/TP/EP/SP expressed declaratively).
+from repro.sharding.rules import DEFAULT_RULES, L, ShardCtx, param_shardings, param_specs
+
+__all__ = ["DEFAULT_RULES", "L", "ShardCtx", "param_shardings", "param_specs"]

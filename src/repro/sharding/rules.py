@@ -1,0 +1,179 @@
+"""Logical-axis sharding rules (MaxText-style) for the LM model zoo.
+
+Every parameter/activation dimension carries a *logical* name; a rule table
+maps logical names to mesh axes, with automatic divisibility fallback: if a
+tensor dimension is not divisible by the mesh axis size the rule degrades to
+replication for that dimension (this is how e.g. phi3's 40 heads coexist
+with a 16-way model axis without padding — heads replicate, d_ff shards).
+
+Mesh axes (launch/mesh.py):
+  pod    (multi-pod only) — outermost data parallelism across pods
+  data   — data parallelism + FSDP weight sharding
+  model  — tensor/expert parallelism + sequence parallelism for caches
+
+The default rule table:
+  batch      -> (pod, data)     activations' batch dim
+  seq        -> None            (model for SP when requested)
+  embed      -> None            d_model on activations
+  vocab      -> model           embedding rows / logits
+  heads      -> model           attention q heads
+  kv_heads   -> model           attention kv heads / kv cache heads
+  qkv        -> None            per-head dim
+  mlp        -> model           FFN hidden
+  expert     -> model           MoE expert axis (EP)
+  d_fsdp     -> data            weight d_model dim (ZeRO-3 style FSDP)
+  cache_seq  -> model           KV-cache sequence axis (SP for decode)
+  layer      -> None            scanned-layer leading axis
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "attn_seq": None,   # attention q seq (SP lever)
+    "q_groups": None,   # padded head-group parallelism lever
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": None,
+    "mlp": "model",
+    "expert": "model",
+    "d_fsdp": "data",
+    "cache_seq": "model",
+    "sp_seq": "model",
+    "cache_batch": ("pod", "data"),
+    "layer": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Mesh + rule table + helpers; mesh=None degrades to no-ops (CPU smoke)."""
+
+    mesh: Optional[Mesh] = None
+    rules: Tuple[Tuple[str, Axis], ...] = tuple(DEFAULT_RULES.items())
+    # Probe mode: fully unroll every lax.scan so compiled.cost_analysis()
+    # counts all iterations (XLA costs a while body ONCE — see launch/roofline).
+    unroll: bool = False
+
+    @property
+    def rule_map(self) -> Dict[str, Axis]:
+        return dict(self.rules)
+
+    def with_rules(self, **overrides: Axis) -> "ShardCtx":
+        m = self.rule_map
+        m.update(overrides)
+        return ShardCtx(mesh=self.mesh, rules=tuple(m.items()), unroll=self.unroll)
+
+    # -------------------------------------------------------------- mapping
+    def _axis_size(self, axis: Axis) -> int:
+        if axis is None or self.mesh is None:
+            return 1
+        if isinstance(axis, str):
+            return self.mesh.shape[axis] if axis in self.mesh.axis_names else 1
+        n = 1
+        for a in axis:
+            n *= self.mesh.shape[a] if a in self.mesh.axis_names else 1
+        return n
+
+    def _present(self, axis: Axis) -> Axis:
+        """Drop mesh axes that don't exist on this mesh (pod on single-pod)."""
+        if axis is None or self.mesh is None:
+            return None
+        if isinstance(axis, str):
+            return axis if axis in self.mesh.axis_names else None
+        kept = tuple(a for a in axis if a in self.mesh.axis_names)
+        return kept if kept else None
+
+    def spec(self, logical: Sequence[Optional[str]], shape=None) -> P:
+        """PartitionSpec for a tensor with the given logical dim names.
+
+        If `shape` is given, any dim not divisible by its mapped axis size
+        falls back to replication (the production fallback for odd head
+        counts etc.).
+        """
+        rm = self.rule_map
+        out = []
+        used = set()
+        for i, name in enumerate(logical):
+            ax = self._present(rm.get(name)) if name is not None else None
+            if ax is not None and shape is not None:
+                if shape[i] % self._axis_size(ax) != 0:
+                    ax = None
+            # A mesh axis may shard at most one tensor dim: first dim wins
+            # (e.g. KV caches name both cache_seq and kv_heads -> model; the
+            # seq dim takes it, heads replicate — override rules to flip).
+            if ax is not None:
+                axes = (ax,) if isinstance(ax, str) else tuple(ax)
+                if any(a in used for a in axes):
+                    ax = None
+                else:
+                    used.update(axes)
+            out.append(ax)
+        return P(*out)
+
+    def sharding(self, logical: Sequence[Optional[str]], shape=None):
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+    def cs(self, x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+        """with_sharding_constraint if a mesh is present, else identity."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(logical, x.shape))
+        )
+
+    def batch_axes(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None or name not in self.mesh.axis_names:
+            return 1
+        return self.mesh.shape[name]
+
+
+class L:
+    """Logical-axes annotation leaf (deliberately NOT a pytree container, so
+    a tree of L(...) mirrors a params tree leaf-for-leaf under tree_map)."""
+
+    __slots__ = ("names",)
+
+    def __init__(self, *names: Optional[str]):
+        self.names = names
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"L{self.names}"
+
+
+def param_specs(ctx: ShardCtx, params, logical_tree):
+    """PartitionSpec pytree for params given a mirroring tree of L leaves."""
+    return jax.tree_util.tree_map(
+        lambda p, l: ctx.spec(l.names, jnp.shape(p)), params, logical_tree
+    )
+
+
+def param_shardings(ctx: ShardCtx, params, logical_tree):
+    """NamedSharding pytree (or None when meshless) for a params tree."""
+    if ctx.mesh is None:
+        return None
+    return jax.tree_util.tree_map(
+        lambda p, l: NamedSharding(ctx.mesh, ctx.spec(l.names, jnp.shape(p))),
+        params,
+        logical_tree,
+    )

@@ -1,0 +1,146 @@
+"""BCPNN core math: units, learning rule, plasticity (paper Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EPS,
+    MarginalState,
+    UnitLayout,
+    batch_means,
+    complementary_layout,
+    hcu_softmax,
+    init_marginals,
+    learning_cycle,
+    onehot_layout,
+    update_marginals,
+    weights_from_marginals,
+)
+from repro.core import plasticity
+from repro.core.learning import forward
+
+
+class TestUnitLayout:
+    def test_blocked_flat_roundtrip(self):
+        lo = UnitLayout(6, 5)
+        x = jnp.arange(2 * 30, dtype=jnp.float32).reshape(2, 30)
+        assert jnp.array_equal(lo.flat(lo.blocked(x)), x)
+
+    def test_bad_sizes(self):
+        with pytest.raises(ValueError):
+            UnitLayout(0, 4)
+        lo = UnitLayout(6, 5)
+        with pytest.raises(ValueError):
+            lo.blocked(jnp.zeros((2, 31)))
+
+    def test_hcu_index(self):
+        lo = UnitLayout(3, 2)
+        assert list(np.asarray(lo.hcu_index())) == [0, 0, 1, 1, 2, 2]
+
+    def test_shard_divisibility(self):
+        UnitLayout(16, 4).validate_divisible_by(8)
+        with pytest.raises(ValueError):
+            UnitLayout(6, 4).validate_divisible_by(4)
+
+    def test_named_layouts(self):
+        assert complementary_layout(10).shape == (10, 2)
+        assert onehot_layout(7).shape == (1, 7)
+
+
+class TestLearning:
+    def test_uniform_init_gives_zero_weights(self):
+        pre, post = UnitLayout(4, 2), UnitLayout(3, 5)
+        marg = init_marginals(8, 15, pre, post)
+        w, b = weights_from_marginals(marg)
+        np.testing.assert_allclose(np.asarray(w), 0.0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(b), np.log(1 / 5), rtol=1e-5)
+
+    def test_jitter_breaks_symmetry(self):
+        pre, post = UnitLayout(4, 2), UnitLayout(3, 5)
+        marg = init_marginals(8, 15, pre, post, key=jax.random.PRNGKey(0), jitter=1.0)
+        w, _ = weights_from_marginals(marg)
+        assert float(jnp.std(w)) > 0.1
+
+    def test_ewma_fixed_point(self):
+        # Repeatedly feeding the same batch must converge C to batch means.
+        rng = np.random.default_rng(0)
+        pre, post = UnitLayout(4, 2), UnitLayout(2, 4)
+        ai = jnp.asarray(rng.dirichlet(np.ones(2), (16, 4)).reshape(16, 8), jnp.float32)
+        aj = jnp.asarray(rng.dirichlet(np.ones(4), (16, 2)).reshape(16, 8), jnp.float32)
+        marg = init_marginals(8, 8, pre, post)
+        mi, mj, mij = batch_means(ai, aj)
+        for _ in range(2000):
+            marg = update_marginals(marg, mi, mj, mij, lam=0.05)
+        np.testing.assert_allclose(np.asarray(marg.ci), np.asarray(mi), rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(marg.cij), np.asarray(mij), rtol=1e-4, atol=1e-6)
+
+    def test_hcu_softmax_is_simplex(self):
+        lo = UnitLayout(5, 7)
+        s = jnp.asarray(np.random.default_rng(1).standard_normal((3, 35)), jnp.float32)
+        a = hcu_softmax(s, lo)
+        sums = lo.blocked(a).sum(-1)
+        np.testing.assert_allclose(np.asarray(sums), 1.0, rtol=1e-5)
+        assert float(a.min()) >= 0.0
+
+    def test_forward_gain_sharpens(self):
+        lo = UnitLayout(2, 8)
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.random((4, 6)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((6, 16)), jnp.float32)
+        b = jnp.zeros((16,))
+        a1 = forward(x, w, b, lo, gain=1.0)
+        a4 = forward(x, w, b, lo, gain=4.0)
+        ent = lambda a: float((-lo.blocked(a) * jnp.log(lo.blocked(a) + 1e-9)).sum(-1).mean())
+        assert ent(a4) < ent(a1)
+
+    def test_learning_cycle_mask_applied(self):
+        pre, post = UnitLayout(4, 2), UnitLayout(2, 4)
+        rng = np.random.default_rng(3)
+        ai = jnp.asarray(rng.random((8, 8)), jnp.float32)
+        aj = jnp.asarray(rng.random((8, 8)), jnp.float32)
+        marg = init_marginals(8, 8, pre, post, key=jax.random.PRNGKey(0), jitter=0.5)
+        mask = jnp.zeros((8, 8)).at[:, :4].set(1.0)
+        _, w, _ = learning_cycle(marg, ai, aj, 0.1, mask=mask)
+        assert float(jnp.abs(w[:, 4:]).max()) == 0.0
+        assert float(jnp.abs(w[:, :4]).max()) > 0.0
+
+
+class TestPlasticity:
+    def _random_marginals(self, pre, post, seed=0):
+        return init_marginals(
+            pre.n_units, post.n_units, pre, post,
+            key=jax.random.PRNGKey(seed), jitter=1.0,
+        )
+
+    def test_random_mask_fan_in(self):
+        pre, post = UnitLayout(10, 2), UnitLayout(6, 3)
+        st = plasticity.init_random_mask(jax.random.PRNGKey(0), pre, post, fan_in=4)
+        np.testing.assert_array_equal(np.asarray(plasticity.fan_in(st)), 4.0)
+
+    def test_update_preserves_fan_in(self):
+        pre, post = UnitLayout(10, 2), UnitLayout(6, 3)
+        st = plasticity.init_random_mask(jax.random.PRNGKey(0), pre, post, fan_in=4)
+        marg = self._random_marginals(pre, post)
+        for i in range(5):
+            st = plasticity.update_mask(st, marg, pre, post)
+            np.testing.assert_array_equal(np.asarray(plasticity.fan_in(st)), 4.0)
+            assert set(np.unique(np.asarray(st.hcu_mask))) <= {0.0, 1.0}
+
+    def test_swap_improves_or_keeps_score(self):
+        pre, post = UnitLayout(8, 2), UnitLayout(4, 3)
+        st = plasticity.init_random_mask(jax.random.PRNGKey(1), pre, post, fan_in=3)
+        marg = self._random_marginals(pre, post, seed=2)
+        scores = plasticity.mi_scores(marg, pre, post)
+        before = (np.asarray(st.hcu_mask) * np.asarray(scores)).sum(0)
+        st2 = plasticity.update_mask(st, marg, pre, post)
+        after = (np.asarray(st2.hcu_mask) * np.asarray(scores)).sum(0)
+        assert (after >= before - 1e-6).all()
+
+    def test_unit_mask_expansion(self):
+        pre, post = UnitLayout(2, 3), UnitLayout(2, 2)
+        st = plasticity.PlasticityState(hcu_mask=jnp.asarray([[1.0, 0.0], [0.0, 1.0]]))
+        m = st.unit_mask(pre, post)
+        assert m.shape == (6, 4)
+        np.testing.assert_array_equal(np.asarray(m[:3, :2]), 1.0)
+        np.testing.assert_array_equal(np.asarray(m[:3, 2:]), 0.0)

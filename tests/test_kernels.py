@@ -1,0 +1,161 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import UnitLayout, init_marginals
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def randf(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+class TestHcuSoftmax:
+    @pytest.mark.parametrize("b,h,m", [
+        (1, 1, 2), (3, 5, 7), (8, 30, 100), (17, 3, 129), (64, 16, 16),
+    ])
+    def test_shapes(self, b, h, m):
+        s = randf((b, h * m), scale=3.0)
+        k = ops.hcu_softmax(s, h, m)
+        r = ref.hcu_softmax(s, h, m)
+        np.testing.assert_allclose(np.asarray(k), np.asarray(r), rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        s = randf((5, 24), dtype=dtype, scale=2.0)
+        k = ops.hcu_softmax(s, 4, 6)
+        r = ref.hcu_softmax(s, 4, 6)
+        np.testing.assert_allclose(
+            np.asarray(k, np.float32), np.asarray(r, np.float32),
+            rtol=2e-2 if dtype == jnp.bfloat16 else 1e-6, atol=1e-3,
+        )
+
+    def test_extreme_values(self):
+        s = jnp.asarray([[1e4, -1e4, 0.0, 5.0]], jnp.float32)
+        k = ops.hcu_softmax(s, 2, 2)
+        assert bool(jnp.all(jnp.isfinite(k)))
+
+
+class TestBcpnnUpdate:
+    @pytest.mark.parametrize("b,f,h", [
+        (4, 6, 8), (32, 24, 30), (128, 100, 150), (13, 17, 19),
+    ])
+    def test_against_ref(self, b, f, h):
+        ai = jnp.abs(randf((b, f))) + 0.01
+        aj = jnp.abs(randf((b, h))) + 0.01
+        pre = UnitLayout(f, 1)
+        post = UnitLayout(h, 1)
+        marg = init_marginals(f, h, pre, post, key=jax.random.PRNGKey(0), jitter=0.5)
+        mask = jnp.asarray((RNG.random((f, h)) > 0.3), jnp.float32)
+        st, wk, bk = ops.bcpnn_update(marg, ai, aj, lam=0.02, k_b=0.7, mask=mask)
+        ci, cj, cij, wr, br = ref.bcpnn_update(
+            ai, aj, marg.ci, marg.cj, marg.cij, 0.02, 0.7, mask
+        )
+        np.testing.assert_allclose(np.asarray(st.cij), np.asarray(cij), rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(st.ci), np.asarray(ci), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(wk), np.asarray(wr), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(bk), np.asarray(br), rtol=1e-6)
+
+    def test_no_mask(self):
+        ai = jnp.abs(randf((16, 10))) + 0.01
+        aj = jnp.abs(randf((16, 12))) + 0.01
+        marg = init_marginals(10, 12)
+        st, wk, bk = ops.bcpnn_update(marg, ai, aj, lam=0.1)
+        ci, cj, cij, wr, br = ref.bcpnn_update(
+            ai, aj, marg.ci, marg.cj, marg.cij, 0.1
+        )
+        np.testing.assert_allclose(np.asarray(wk), np.asarray(wr), rtol=1e-4, atol=1e-5)
+
+
+class TestMaskedMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (4, 6, 8), (32, 64, 16), (100, 50, 129), (256, 128, 256),
+    ])
+    def test_against_ref(self, m, k, n):
+        x = randf((m, k))
+        w = randf((k, n))
+        b = randf((n,))
+        mask = jnp.asarray((RNG.random((k, n)) > 0.5), jnp.float32)
+        got = ops.masked_matmul(x, w, b, mask)
+        want = ref.masked_matmul(x, w, b, mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_no_mask(self):
+        x = randf((8, 16))
+        w = randf((16, 8))
+        b = randf((8,))
+        np.testing.assert_allclose(
+            np.asarray(ops.masked_matmul(x, w, b)),
+            np.asarray(ref.masked_matmul(x, w, b)),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_bf16_inputs(self):
+        x = randf((8, 16), jnp.bfloat16)
+        w = randf((16, 8), jnp.bfloat16)
+        b = randf((8,), jnp.float32)
+        got = ops.masked_matmul(x, w, b)
+        want = ref.masked_matmul(x, w, b)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=2e-2, atol=1e-2,
+        )
+
+
+class TestBfRound:
+    @pytest.mark.parametrize("mbits", [5, 6, 7, 11, 15, 19, 23])
+    def test_matches_ref(self, mbits):
+        x = randf((1000,), scale=100.0)
+        got = ops.bf_round(x, mbits)
+        want = ref.bf_round(x, mbits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_bf16_equivalence(self):
+        """mantissa=7 must be bit-identical to an f32->bf16->f32 roundtrip."""
+        x = randf((4096,), scale=50.0)
+        got = ops.bf_round(x, 7)
+        want = x.astype(jnp.bfloat16).astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_nonfinite_passthrough(self):
+        x = jnp.asarray([np.inf, -np.inf, np.nan, 1.5], jnp.float32)
+        out = np.asarray(ops.bf_round(x, 7))
+        assert np.isposinf(out[0]) and np.isneginf(out[1]) and np.isnan(out[2])
+
+    def test_relative_error_bound(self):
+        x = randf((2048,), scale=10.0)
+        for mbits in (7, 11, 15):
+            out = ops.bf_round(x, mbits)
+            rel = np.abs(np.asarray(out) - np.asarray(x)) / np.abs(np.asarray(x))
+            assert rel.max() <= 2.0 ** (-mbits)  # RNE: half-ulp bound
+
+    def test_odd_shapes(self):
+        for shape in [(1,), (127,), (3, 5, 7)]:
+            x = randf(shape)
+            np.testing.assert_array_equal(
+                np.asarray(ops.bf_round(x, 10)), np.asarray(ref.bf_round(x, 10))
+            )
+
+
+class TestKernelLayerIntegration:
+    def test_layer_kernel_path_matches_ref_path(self):
+        """StructuralPlasticityLayer(use_kernels=True) == reference path."""
+        from repro.core import StructuralPlasticityLayer
+
+        pre, post = UnitLayout(12, 2), UnitLayout(4, 8)
+        x = jnp.asarray(RNG.random((16, 24)), jnp.float32)
+        outs = {}
+        for use_k in (False, True):
+            layer = StructuralPlasticityLayer(
+                pre, post, fan_in=8, lam=0.05, use_kernels=use_k, init_jitter=1.0
+            )
+            st = layer.init(jax.random.PRNGKey(0))
+            for _ in range(3):
+                st, aj = layer.train_batch(st, x)
+            outs[use_k] = (np.asarray(st.w), np.asarray(aj))
+        np.testing.assert_allclose(outs[True][0], outs[False][0], rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(outs[True][1], outs[False][1], rtol=1e-4, atol=1e-5)

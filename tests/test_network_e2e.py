@@ -1,0 +1,174 @@
+"""End-to-end BCPNN behaviour: accuracy on synthetic data, hybrid readout,
+precision-format cliff, streaming mode, data substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DenseLayer,
+    Network,
+    StructuralPlasticityLayer,
+    UnitLayout,
+    onehot_layout,
+)
+from repro.data import (
+    complementary_code,
+    epoch_batches,
+    lm_batches,
+    mnist_like,
+    onehot_code,
+    token_stream,
+)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    ds = mnist_like(n_train=4096, n_test=512, n_features=64, seed=0)
+    x_tr, layout = complementary_code(ds.x_train)
+    x_te, _ = complementary_code(ds.x_test)
+    return ds, x_tr, x_te, layout
+
+
+def _fit(dataset, readout="bcpnn", precision=None, gain=4.0, epochs=6):
+    ds, x_tr, x_te, layout = dataset
+    hidden = UnitLayout(16, 16)
+    net = Network(seed=0)
+    net.add(
+        StructuralPlasticityLayer(
+            layout, hidden, fan_in=32, lam=0.02, init_jitter=1.0, gain=gain,
+            precision=precision,
+        )
+    )
+    net.add(DenseLayer(hidden, onehot_layout(10), lam=0.02, precision=precision))
+    net.fit(
+        (x_tr, ds.y_train), epochs_hidden=epochs, epochs_readout=epochs,
+        batch_size=128, readout=readout,
+    )
+    return net.evaluate((x_te, ds.y_test))
+
+
+class TestAccuracy:
+    def test_unsupervised_plus_bcpnn_readout(self, dataset):
+        """Paper Fig 2c analogue: way above chance on the MNIST-shaped proxy."""
+        acc = _fit(dataset)
+        assert acc > 0.85, acc
+
+    def test_hybrid_sgd_readout(self, dataset):
+        """Paper's 97.5% hybrid recipe: >= the pure-BCPNN readout."""
+        acc = _fit(dataset, readout="sgd")
+        assert acc > 0.85, acc
+
+    def test_gain_matters(self, dataset):
+        """Soft-WTA sharpness drives the unsupervised clustering."""
+        acc_sharp = _fit(dataset, gain=4.0, epochs=3)
+        acc_flat = _fit(dataset, gain=1.0, epochs=3)
+        assert acc_sharp > acc_flat
+
+
+class TestPrecisionCliff:
+    """Paper Fig. 3: BF20+ ~ f32; BF14 collapses to chance."""
+
+    @pytest.fixture(scope="class")
+    def accs(self, dataset):
+        from repro.precision import PrecisionPolicy
+
+        out = {}
+        for name in ("fp32", "bf20", "bf16", "bf14"):
+            out[name] = _fit(
+                dataset, precision=PrecisionPolicy.named(name), epochs=6
+            )
+        return out
+
+    def test_bf20_matches_fp32(self, accs):
+        assert abs(accs["bf20"] - accs["fp32"]) < 0.05, accs
+
+    def test_bf16_minor_degradation(self, accs):
+        assert accs["bf16"] > accs["fp32"] - 0.15, accs
+
+    def test_bf14_collapses(self, accs):
+        """Stage-boundary emulation is gentler than the paper's per-operator
+        FPU truncation, so bf14 degrades hard (~-20%) rather than to chance;
+        the cliff LOCATION (bf14 << bf16 ~ fp32) matches Fig. 3."""
+        assert accs["bf14"] < accs["fp32"] - 0.15, accs
+        assert accs["bf14"] < accs["bf16"] - 0.10, accs
+
+    def test_ordering(self, accs):
+        assert accs["bf14"] <= accs["bf16"] + 0.05 <= accs["bf20"] + 0.10
+
+
+class TestStreaming:
+    def test_streaming_equals_batched(self, dataset):
+        """Feeding micro-batches through StreamingSession == batched training
+        when flush boundaries line up."""
+        from repro.core.streaming import StreamingSession
+
+        ds, x_tr, _, layout = dataset
+        hidden = UnitLayout(4, 8)
+        layer = StructuralPlasticityLayer(
+            layout, hidden, fan_in=16, lam=0.05, init_jitter=1.0
+        )
+        st0 = layer.init(jax.random.PRNGKey(0))
+
+        x = x_tr[:64]
+        # batched: 4 batches of 16
+        st_b = st0
+        for i in range(0, 64, 16):
+            st_b, _ = jax.jit(layer.train_batch)(st_b, jnp.asarray(x[i : i + 16]))
+
+        sess = StreamingSession(layer, st0, max_batch=16)
+        for row in x:
+            sess.feed(row)
+        st_s = sess.close()
+        np.testing.assert_allclose(
+            np.asarray(st_s.w), np.asarray(st_b.w), rtol=1e-5, atol=1e-6
+        )
+        assert sess.flushes == 4
+
+    def test_single_sample_inference(self, dataset):
+        from repro.core.streaming import StreamingSession
+
+        ds, x_tr, _, layout = dataset
+        hidden = UnitLayout(4, 8)
+        layer = StructuralPlasticityLayer(layout, hidden, fan_in=16, init_jitter=1.0)
+        sess = StreamingSession(layer, layer.init(jax.random.PRNGKey(0)))
+        out = sess.infer(x_tr[0])
+        assert out.shape == (32,)
+        np.testing.assert_allclose(out.reshape(4, 8).sum(-1), 1.0, rtol=1e-5)
+
+
+class TestData:
+    def test_complementary_coding(self):
+        x = np.asarray([[0.25, 0.75]], np.float32)
+        coded, layout = complementary_code(x)
+        np.testing.assert_allclose(coded, [[0.25, 0.75, 0.75, 0.25]])
+        assert layout.shape == (2, 2)
+
+    def test_onehot_coding(self):
+        coded, layout = onehot_code(np.asarray([1, 0]), 3)
+        np.testing.assert_array_equal(coded, [[0, 1, 0], [1, 0, 0]])
+        assert layout.shape == (1, 3)
+
+    def test_dataset_determinism(self):
+        a = mnist_like(n_train=64, n_test=16, n_features=32, seed=3)
+        b = mnist_like(n_train=64, n_test=16, n_features=32, seed=3)
+        np.testing.assert_array_equal(a.x_train, b.x_train)
+        assert a.x_train.min() >= 0 and a.x_train.max() <= 1
+
+    def test_epoch_batches_deterministic_shuffle(self):
+        x = np.arange(40, dtype=np.float32).reshape(20, 2)
+        y = np.arange(20)
+        b1 = [yy for _, yy in epoch_batches(x, y, 8, epoch=1, seed=5)]
+        b2 = [yy for _, yy in epoch_batches(x, y, 8, epoch=1, seed=5)]
+        b3 = [yy for _, yy in epoch_batches(x, y, 8, epoch=2, seed=5)]
+        np.testing.assert_array_equal(np.concatenate(b1), np.concatenate(b2))
+        assert not np.array_equal(np.concatenate(b1), np.concatenate(b3))
+
+    def test_token_stream_and_lm_batches(self):
+        toks = token_stream(10_000, vocab_size=512, seed=1)
+        assert toks.min() >= 0 and toks.max() < 512
+        batches = list(lm_batches(toks, batch_size=4, seq_len=64, epoch=0))
+        assert batches
+        b = batches[0]
+        assert b["tokens"].shape == (4, 64)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])

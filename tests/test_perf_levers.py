@@ -1,0 +1,134 @@
+"""Beyond-paper perf levers must be exactly semantics-preserving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.models.lm import _xent
+
+RNG = np.random.default_rng(21)
+
+
+class TestShardedXent:
+    @pytest.mark.parametrize("masked", [False, True])
+    def test_equals_take_along_axis_form(self, masked):
+        logits = jnp.asarray(RNG.standard_normal((3, 17, 40)) * 3, jnp.float32)
+        labels = jnp.asarray(RNG.integers(0, 40, (3, 17)), jnp.int32)
+        if masked:
+            labels = labels.at[0, :5].set(-1)
+        a = _xent(logits, labels, sharded=False)
+        b = _xent(logits, labels, sharded=True)
+        assert abs(float(a) - float(b)) < 1e-6
+
+    def test_loss_flag_end_to_end(self):
+        cfg = get_smoke_config("yi-9b")
+        cfg_s = dataclasses.replace(cfg, sharded_xent=True)
+        batch = {
+            "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+            "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+        }
+        m0, m1 = build_model(cfg), build_model(cfg_s)
+        params = m0.init(jax.random.PRNGKey(0))
+        l0 = float(jax.jit(m0.loss)(params, batch))
+        l1 = float(jax.jit(m1.loss)(params, batch))
+        assert abs(l0 - l1) < 1e-5
+
+
+class TestPaddedHeads:
+    def _graft(self, padded, src, kh):
+        """Copy unpadded weights into the padded params (per kv group)."""
+        for k in src:
+            if isinstance(src[k], dict):
+                self._graft(padded[k], src[k], kh)
+            elif np.shape(padded[k]) != np.shape(src[k]):
+                d = np.zeros_like(np.asarray(padded[k]))
+                s = np.asarray(src[k])
+                if k == "wq":
+                    *lead, dm, he, dh = d.shape
+                    ge, g = he // kh, s.shape[-2] // kh
+                    db = d.reshape(*lead, dm, kh, ge, dh)
+                    db[..., :, :, :g, :] = s.reshape(*lead, dm, kh, g, dh)
+                    padded[k] = jnp.asarray(db.reshape(*lead, dm, he, dh))
+                elif k == "wo":
+                    *lead, he, dh, dm = d.shape
+                    ge, g = he // kh, s.shape[-3] // kh
+                    db = d.reshape(*lead, kh, ge, dh, dm)
+                    db[..., :, :g, :, :] = s.reshape(*lead, kh, g, dh, dm)
+                    padded[k] = jnp.asarray(db.reshape(*lead, he, dh, dm))
+            else:
+                padded[k] = jnp.asarray(src[k])
+
+    def test_forward_identical(self):
+        cfg = get_smoke_config("starcoder2-3b")
+        batch = {
+            "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32)
+        }
+        m0 = build_model(cfg)
+        p0 = m0.init(jax.random.PRNGKey(0))
+        ref, _ = jax.jit(m0.forward)(p0, batch)
+        mp = build_model(dataclasses.replace(cfg, pad_heads_to=8))
+        pp = jax.device_get(mp.init(jax.random.PRNGKey(0)))
+        self._graft(pp, jax.device_get(p0), cfg.n_kv_heads)
+        out, _ = jax.jit(mp.forward)(pp, batch)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_pad_gradients_stay_zero(self):
+        from repro.optim import AdamW
+
+        cfg = dataclasses.replace(get_smoke_config("starcoder2-3b"), pad_heads_to=8)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(1))
+        batch = {
+            "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+            "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+        }
+        opt = AdamW(learning_rate=1e-2)
+        step = jax.jit(m.make_train_step(opt, n_micro=1))
+        p2, _, _ = step(params, opt.init(params), batch)
+        wq = np.asarray(p2["layers"]["attn"]["wq"])
+        kh = cfg.n_kv_heads
+        blocked = wq.reshape(wq.shape[0], wq.shape[1], kh, -1, wq.shape[-1])
+        g_orig = cfg.n_heads // kh
+        assert np.abs(blocked[:, :, :, g_orig:, :]).max() == 0.0
+
+    def test_decode_consistency_with_padding(self):
+        cfg = dataclasses.replace(get_smoke_config("starcoder2-3b"), pad_heads_to=8)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 24)), jnp.int32)
+        full, _ = jax.jit(m.forward)(params, {"tokens": toks})
+        last_pre, cache = jax.jit(m.prefill)(params, {"tokens": toks[:, :-1]})
+        cache = {k: jnp.pad(v, [(0, 0), (0, 0), (0, 4), (0, 0), (0, 0)])
+                 for k, v in cache.items()}
+        logits, _ = jax.jit(m.decode_step)(
+            params, cache, toks[:, -1:], jnp.asarray(23, jnp.int32)
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[:, -1, :]), rtol=1e-4, atol=1e-4
+        )
+
+
+class TestCastOnce:
+    def test_loss_close_and_step_runs(self):
+        from repro.optim import AdamW
+
+        cfg = get_smoke_config("yi-9b")
+        cfg_c = dataclasses.replace(cfg, cast_params_once=True)
+        batch = {
+            "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+            "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+        }
+        opt = AdamW(learning_rate=1e-3)
+        m0, m1 = build_model(cfg), build_model(cfg_c)
+        params = m0.init(jax.random.PRNGKey(0))
+        s0 = jax.jit(m0.make_train_step(opt, n_micro=2))
+        s1 = jax.jit(m1.make_train_step(opt, n_micro=2))
+        _, _, met0 = s0(params, opt.init(params), batch)
+        _, _, met1 = s1(params, opt.init(params), batch)
+        # smoke configs run f32, so the cast path == identity there; on the
+        # bf16 target it introduces rounding — just require closeness
+        assert abs(float(met0["loss"]) - float(met1["loss"])) < 5e-2

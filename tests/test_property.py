@@ -1,0 +1,117 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import UnitLayout, init_marginals, update_marginals, batch_means
+from repro.core import plasticity
+from repro.kernels import ops, ref
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def layouts(draw):
+    h = draw(st.integers(1, 8))
+    m = draw(st.integers(2, 12))
+    return UnitLayout(h, m)
+
+
+@given(layouts(), st.integers(1, 8), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_hcu_softmax_simplex(lo, b, seed):
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.standard_normal((b, lo.n_units)) * 5, jnp.float32)
+    a = ops.hcu_softmax(s, lo.n_hcu, lo.n_mcu)
+    blocked = np.asarray(lo.blocked(a))
+    assert np.all(blocked >= 0)
+    np.testing.assert_allclose(blocked.sum(-1), 1.0, rtol=1e-4)
+
+
+@given(st.integers(1, 22), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_bf_round_idempotent(mbits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(257) * 100, jnp.float32)
+    once = ops.bf_round(x, mbits)
+    twice = ops.bf_round(once, mbits)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@given(st.integers(1, 21), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_bf_round_monotone_in_mantissa(mbits, seed):
+    """More mantissa bits never increases the rounding error."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(128) * 10, jnp.float32)
+    e_low = np.abs(np.asarray(ops.bf_round(x, mbits)) - np.asarray(x))
+    e_high = np.abs(np.asarray(ops.bf_round(x, mbits + 2)) - np.asarray(x))
+    assert (e_high <= e_low + 1e-12).all()
+
+
+@given(st.integers(2, 16), st.integers(2, 10), st.integers(0, 2**31 - 1),
+       st.floats(0.001, 0.5))
+@settings(**SET)
+def test_marginals_stay_in_simplex(b, units, seed, lam):
+    """EWMA of probability activations keeps marginals in [0, 1]."""
+    rng = np.random.default_rng(seed)
+    lo = UnitLayout(1, units)
+    ai = jnp.asarray(rng.dirichlet(np.ones(units), b), jnp.float32)
+    aj = jnp.asarray(rng.dirichlet(np.ones(units), b), jnp.float32)
+    marg = init_marginals(units, units, lo, lo)
+    for _ in range(5):
+        mi, mj, mij = batch_means(ai, aj)
+        marg = update_marginals(marg, mi, mj, mij, lam)
+    for arr in (marg.ci, marg.cj, marg.cij):
+        a = np.asarray(arr)
+        assert (a >= -1e-7).all() and (a <= 1.0 + 1e-6).all()
+    # joint marginalizes approximately to ci (consistency of the estimator)
+    np.testing.assert_allclose(
+        np.asarray(marg.cij.sum(1)), np.asarray(marg.ci), rtol=1e-4, atol=1e-5
+    )
+
+
+@given(st.integers(2, 12), st.integers(1, 6), st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_plasticity_fan_in_invariant(n_pre_hcu, fan_in, seed):
+    fan_in = min(fan_in, n_pre_hcu)
+    pre, post = UnitLayout(n_pre_hcu, 2), UnitLayout(3, 2)
+    key = jax.random.PRNGKey(seed)
+    stp = plasticity.init_random_mask(key, pre, post, fan_in)
+    marg = init_marginals(
+        pre.n_units, post.n_units, pre, post, key=key, jitter=1.0
+    )
+    for _ in range(3):
+        stp = plasticity.update_mask(stp, marg, pre, post)
+        np.testing.assert_array_equal(np.asarray(plasticity.fan_in(stp)), fan_in)
+
+
+@given(st.integers(1, 64), st.integers(1, 32), st.integers(1, 32),
+       st.integers(0, 2**31 - 1))
+@settings(**SET)
+def test_masked_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    mask = jnp.asarray(rng.random((k, n)) > 0.5, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.masked_matmul(x, w, b, mask)),
+        np.asarray(ref.masked_matmul(x, w, b, mask)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 0.99))
+@settings(**SET)
+def test_topk_compression_preserves_signal(seed, kfrac):
+    """Error feedback: compressed-sum + residual == original gradient."""
+    from repro.optim.compression import init_error_feedback, topk_compress_allreduce
+
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)}
+    ef = init_error_feedback(g)
+    out, ef2, _ = topk_compress_allreduce(g, ef, k_fraction=kfrac)
+    total = np.asarray(out["w"]) + np.asarray(ef2.residual["w"])
+    np.testing.assert_allclose(total, np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
