@@ -44,6 +44,33 @@ class FitResult:
     history: List[dict]
 
 
+def sgd_readout_setup(seed: int, n_hidden: int, y: np.ndarray, lr: float):
+    """Hybrid-readout initialization shared by both fit engines.
+
+    Returns (params, opt, opt_state, loss_fn) for the AdamW cross-entropy
+    readout.  Single source of truth for the hyperparameters — the per-batch
+    loop and the scan engine must stay numerically interchangeable.
+    """
+    from repro.optim import adamw  # local import: optim is a sibling package
+
+    n_classes = int(np.max(y)) + 1
+    key = jax.random.PRNGKey(seed + 1)
+    params = {
+        "w": jax.random.normal(key, (n_hidden, n_classes), jnp.float32)
+        * (1.0 / np.sqrt(n_hidden)),
+        "b": jnp.zeros((n_classes,), jnp.float32),
+    }
+    opt = adamw.AdamW(learning_rate=lr, weight_decay=1e-4)
+
+    def loss_fn(p, hb, yb):
+        logits = hb @ p["w"] + p["b"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - ll)
+
+    return params, opt, opt.init(params), loss_fn
+
+
 class Network:
     """A sequential BCPNN network (hidden plasticity layers + one readout)."""
 
@@ -134,6 +161,7 @@ class Network:
         shuffle: bool = True,
         verbose: bool = False,
         trainer=None,
+        engine: str = "scan",
     ) -> FitResult:
         """Two-phase BCPNN training (Alg. 1 + supervised readout).
 
@@ -141,48 +169,84 @@ class Network:
         (see repro.data.coding) and y integer class labels (n,).
         trainer: optional repro.core.distributed.DataParallelTrainer that
         replaces the per-batch jitted step with a sharded one.
+        engine: "scan" (default) runs each epoch as a single jitted
+        lax.scan over device-resident stacked batches
+        (repro.runtime.epoch_engine); "batch" is the per-batch reference
+        loop (one dispatch + one host->device transfer per batch).  Both
+        paths produce the same learned state modulo reduction order.
         """
         t0 = time.perf_counter()
         self.build()
         x, y = dataset
-        n = x.shape[0]
+        self._n_total = n = x.shape[0]
+        if n == 0:
+            raise ValueError("fit() called with an empty dataset")
+        if engine not in ("scan", "batch"):
+            raise ValueError(f"Unknown engine {engine!r} (want 'scan' or 'batch')")
+        if readout not in ("bcpnn", "sgd"):
+            raise ValueError(f"Unknown readout {readout!r} (want 'bcpnn' or 'sgd')")
+        # A batch size larger than the dataset would round n down to zero and
+        # silently train on nothing — clamp to the dataset size instead.
+        batch_size = min(batch_size, n)
         if n % batch_size != 0:
-            # Keep step functions shape-stable under jit: trim the ragged tail
-            # (the paper shuffles every epoch, so no sample is permanently excluded).
+            # Keep step functions shape-stable under jit: each epoch uses n
+            # samples (a multiple of B).  _epoch_indices permutes the FULL
+            # dataset before truncating, so a different ragged tail is left
+            # out each epoch and no sample is permanently excluded.
             n = (n // batch_size) * batch_size
         history: List[dict] = []
 
-        # Phase 1: unsupervised, layer by layer (greedy stacking).
-        for li, layer in enumerate(self.hidden_layers):
-            step = (
-                trainer.hidden_step(layer)
-                if trainer is not None
-                else jax.jit(lambda s, xb, _l=layer: _l.train_batch(s, xb)[0])
-            )
-            below = jax.jit(lambda xb, _n=li: self._hidden_forward(xb, upto=_n))
-            for epoch in range(epochs_hidden):
-                idx = self._epoch_indices(n, shuffle)
-                for b in range(0, n, batch_size):
-                    xb = jnp.asarray(x[idx[b : b + batch_size]])
-                    if li > 0:
-                        xb = below(xb)
-                    self.states[li] = step(self.states[li], xb)
-                if verbose:
-                    print(f"[fit] hidden layer {li} epoch {epoch + 1}/{epochs_hidden}")
-                history.append({"phase": f"hidden{li}", "epoch": epoch})
+        if engine == "scan":
+            from repro.runtime.epoch_engine import EpochEngine
 
-        # Phase 2: supervised readout on frozen hidden representations.
-        if readout == "bcpnn":
-            self._fit_bcpnn_readout(
-                x, y, n, epochs_readout, batch_size, shuffle, history, verbose, trainer
+            eng = EpochEngine(self, trainer=trainer)
+            eng.run_hidden_phase(
+                x, n, epochs_hidden, batch_size, shuffle, history, verbose
             )
-        elif readout == "sgd":
-            self._fit_sgd_readout(
-                x, y, n, epochs_readout, batch_size, shuffle, history, verbose,
-                lr=readout_lr,
-            )
+            if readout == "bcpnn":
+                eng.run_bcpnn_readout(
+                    x, y, n, epochs_readout, batch_size, shuffle, history, verbose
+                )
+            else:
+                self._sgd_readout = eng.run_sgd_readout(
+                    x, y, n, epochs_readout, batch_size, shuffle, history,
+                    verbose, lr=readout_lr,
+                )
         else:
-            raise ValueError(f"Unknown readout {readout!r} (want 'bcpnn' or 'sgd')")
+            # ---- engine == "batch": the per-batch reference loop ----
+            # Phase 1: unsupervised, layer by layer (greedy stacking).
+            for li, layer in enumerate(self.hidden_layers):
+                step = (
+                    trainer.hidden_step(layer)
+                    if trainer is not None
+                    else jax.jit(lambda s, xb, _l=layer: _l.train_batch(s, xb)[0])
+                )
+                below = jax.jit(lambda xb, _n=li: self._hidden_forward(xb, upto=_n))
+                for epoch in range(epochs_hidden):
+                    idx = self._epoch_indices(n, shuffle)
+                    for b in range(0, n, batch_size):
+                        xb = jnp.asarray(x[idx[b : b + batch_size]])
+                        if li > 0:
+                            xb = below(xb)
+                        self.states[li] = step(self.states[li], xb)
+                    if verbose:
+                        print(
+                            f"[fit] hidden layer {li} epoch "
+                            f"{epoch + 1}/{epochs_hidden}"
+                        )
+                    history.append({"phase": f"hidden{li}", "epoch": epoch})
+
+            # Phase 2: supervised readout on frozen hidden representations.
+            if readout == "bcpnn":
+                self._fit_bcpnn_readout(
+                    x, y, n, epochs_readout, batch_size, shuffle, history,
+                    verbose, trainer,
+                )
+            else:
+                self._fit_sgd_readout(
+                    x, y, n, epochs_readout, batch_size, shuffle, history,
+                    verbose, lr=readout_lr,
+                )
 
         return FitResult(
             epochs_hidden=epochs_hidden,
@@ -193,10 +257,15 @@ class Network:
         )
 
     def _epoch_indices(self, n: int, shuffle: bool) -> np.ndarray:
-        idx = np.arange(n)
-        if shuffle:
-            self._rng.shuffle(idx)
-        return idx
+        """First `n` indices of a full-dataset permutation.
+
+        Permuting all `_n_total` samples before truncating to the
+        shape-stable length `n` rotates which ragged-tail samples sit out
+        each epoch — a fixed arange(n) would permanently exclude the tail.
+        """
+        if not shuffle:
+            return np.arange(n)
+        return self._rng.permutation(getattr(self, "_n_total", n))[:n]
 
     def _fit_bcpnn_readout(
         self, x, y, n, epochs, batch_size, shuffle, history, verbose, trainer
@@ -229,24 +298,10 @@ class Network:
         paper's 97.5%+ MNIST configuration ("using StreamBrain to derive
         hidden layer representations ... and SGD training only for the output
         layer")."""
-        from repro.optim import adamw  # local import: optim is a sibling package
-
         n_hidden = self.hidden_layers[-1].spec.n_post
-        n_classes = int(np.max(y)) + 1
-        key = jax.random.PRNGKey(self.seed + 1)
-        params = {
-            "w": jax.random.normal(key, (n_hidden, n_classes), jnp.float32)
-            * (1.0 / np.sqrt(n_hidden)),
-            "b": jnp.zeros((n_classes,), jnp.float32),
-        }
-        opt = adamw.AdamW(learning_rate=lr, weight_decay=1e-4)
-        opt_state = opt.init(params)
-
-        def loss_fn(p, hb, yb):
-            logits = hb @ p["w"] + p["b"]
-            logz = jax.nn.logsumexp(logits, axis=-1)
-            ll = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
-            return jnp.mean(logz - ll)
+        params, opt, opt_state, loss_fn = sgd_readout_setup(
+            self.seed, n_hidden, y, lr
+        )
 
         @jax.jit
         def step(p, s, hb, yb):

@@ -13,7 +13,6 @@ routes here when ``use_kernels=True``).  Responsibilities:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -25,8 +24,11 @@ from repro.kernels import hcu_softmax as _sk
 from repro.kernels import masked_matmul as _mk
 
 
-@functools.lru_cache(maxsize=1)
 def _interpret() -> bool:
+    # Deliberately uncached: caching the first answer would pin interpret
+    # mode across a later jax.config platform change (e.g. a test forcing
+    # cpu after a tpu init), silently running Pallas in the wrong mode.
+    # jax caches the backend lookup itself, so this is cheap.
     return jax.default_backend() != "tpu"
 
 

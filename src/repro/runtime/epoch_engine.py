@@ -1,0 +1,265 @@
+"""Device-resident epoch engine: one jitted ``lax.scan`` per training epoch.
+
+The seed ``Network.fit`` drives every batch from Python — a fresh
+host->device transfer plus a jitted-call dispatch per batch — so on small
+BCPNN layers the dispatch overhead, not the MXU, dominates (the BLAS2->BLAS3
+aggregation problem StreamBrain solves with resident-state streaming).  This
+module keeps the whole Alg. 1 inner loop resident on the device:
+
+* :func:`stack_epoch` gathers a pre-shuffled epoch once on the host and
+  reshapes it to ``(n_batches, B, ...)`` so the epoch crosses the PCIe/ICI
+  boundary exactly once;
+* the ``*_epoch_fn`` builders wrap a per-batch transition into a single
+  jitted, buffer-donated ``lax.scan`` over the leading batch axis — the
+  hidden Hebbian phase, the BCPNN readout phase, and the SGD readout phase
+  each get a scan body.
+
+Numerics are bit-identical to the per-batch loop modulo reduction order:
+the scan body runs exactly the per-batch transition (including the
+``lax.cond``-guarded structural-plasticity rewire, which keys on
+``state.step`` carried through the scan), just without returning to Python
+between batches.  ``tests/test_epoch_engine.py`` asserts parity for both the
+reference and Pallas-kernel paths.
+
+Distributed training threads through unchanged: a
+:class:`repro.core.distributed.DataParallelTrainer` step (shard_map or pjit)
+is itself a traceable function, so it becomes the scan body and the stacked
+epoch is placed with the batch axes sharded (leading scan axis replicated).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def stack_epoch(
+    arr: np.ndarray,
+    idx: np.ndarray,
+    batch_size: int,
+    sharding: Optional[NamedSharding] = None,
+) -> jnp.ndarray:
+    """Gather a shuffled epoch and reshape to ``(n_batches, B, ...)``.
+
+    One contiguous host-side gather, one device transfer — versus one
+    transfer per batch in the per-batch loop.  ``idx`` must already be
+    trimmed to a multiple of ``batch_size``.
+    """
+    n = idx.shape[0]
+    if n % batch_size != 0:
+        raise ValueError(f"epoch of {n} samples is not a multiple of B={batch_size}")
+    stacked = np.ascontiguousarray(arr[idx]).reshape(
+        n // batch_size, batch_size, *arr.shape[1:]
+    )
+    if sharding is not None:
+        return jax.device_put(stacked, sharding)
+    return jnp.asarray(stacked)
+
+
+def epoch_sharding(trainer, ndim: int) -> Optional[NamedSharding]:
+    """Sharding for a stacked ``(n_batches, B, ...)`` epoch under a trainer.
+
+    The scan axis (leading) is replicated; the per-batch axis is sharded over
+    the trainer's batch mesh axes, so each scan slice is exactly the global
+    batch layout the trainer's shard_map/pjit step expects.
+    """
+    if trainer is None:
+        return None
+    return NamedSharding(
+        trainer.mesh, P(None, trainer.baxes, *(None,) * (ndim - 2))
+    )
+
+
+# --------------------------------------------------------------------------
+# Epoch-scan builders.  Each returns a jitted function closed over the layer
+# *structure* (static) and taking all traced state explicitly, with the
+# mutable carry and the epoch buffers donated — re-running an epoch reuses
+# the same compiled program.
+# --------------------------------------------------------------------------
+def _donate(*argnums: int) -> dict:
+    """donate_argnums kwargs, suppressed on CPU (donation unsupported there
+    and jax warns per-call)."""
+    if jax.default_backend() == "cpu":
+        return {}
+    return {"donate_argnums": argnums}
+
+
+def _forward_stack(layers: Sequence[Any]) -> Callable:
+    def fwd(states, xb):
+        for layer, state in zip(layers, states):
+            xb = layer.forward(state, xb)
+        return xb
+
+    return fwd
+
+
+def hidden_epoch_fn(
+    layer,
+    below_layers: Sequence[Any],
+    step_fn: Optional[Callable] = None,
+) -> Callable:
+    """Jitted ``(state, below_states, xs) -> state`` for one Hebbian epoch.
+
+    ``xs``: stacked input epoch ``(n_batches, B, F)``.  ``below_states`` are
+    the frozen lower hidden layers (passed as traced args, not baked-in
+    constants, so the compiled epoch is reusable).  ``step_fn`` overrides the
+    per-batch transition — e.g. a DataParallelTrainer.hidden_step.
+    """
+    below = _forward_stack(below_layers)
+    step = step_fn if step_fn is not None else (
+        lambda s, xb: layer.train_batch(s, xb)[0]
+    )
+
+    def epoch(state, below_states, xs):
+        def body(carry, xb):
+            return step(carry, below(below_states, xb)), None
+
+        state, _ = jax.lax.scan(body, state, xs)
+        return state
+
+    return jax.jit(epoch, **_donate(0, 2))
+
+
+def readout_epoch_fn(
+    layer,
+    hidden_layers: Sequence[Any],
+    step_fn: Optional[Callable] = None,
+) -> Callable:
+    """Jitted ``(state, hidden_states, xs, ys) -> state`` for one supervised
+    BCPNN-readout epoch (post-activations clamped to one-hot labels)."""
+    below = _forward_stack(hidden_layers)
+    step = step_fn if step_fn is not None else (
+        lambda s, hb, yb: layer.train_batch(s, hb, yb)[0]
+    )
+
+    def epoch(state, hidden_states, xs, ys):
+        def body(carry, batch):
+            xb, yb = batch
+            return step(carry, below(hidden_states, xb), yb), None
+
+        state, _ = jax.lax.scan(body, state, (xs, ys))
+        return state
+
+    return jax.jit(epoch, **_donate(0, 2, 3))
+
+
+def sgd_epoch_fn(opt, hidden_layers: Sequence[Any], loss_fn: Callable) -> Callable:
+    """Jitted ``(params, opt_state, hidden_states, xs, ys) ->
+    (params, opt_state, losses)`` for one hybrid-readout (AdamW) epoch."""
+    below = _forward_stack(hidden_layers)
+
+    def epoch(params, opt_state, hidden_states, xs, ys):
+        def body(carry, batch):
+            p, s = carry
+            xb, yb = batch
+            hb = below(hidden_states, xb)
+            loss, g = jax.value_and_grad(loss_fn)(p, hb, yb)
+            updates, s = opt.update(g, s, p)
+            p = jax.tree_util.tree_map(lambda a, u: a + u, p, updates)
+            return (p, s), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), (xs, ys)
+        )
+        return params, opt_state, losses
+
+    return jax.jit(epoch, **_donate(0, 1, 3, 4))
+
+
+class EpochEngine:
+    """Drives Network.fit's three phases through epoch-long scans.
+
+    Owns the per-layer compiled epoch functions (built once, reused across
+    epochs) and the host-side shuffle/stack.  The network's layer *structure*
+    is closed over; all learnable state stays in the functional pytrees the
+    caller threads through.
+    """
+
+    def __init__(self, network, trainer=None):
+        self.net = network
+        self.trainer = trainer
+
+    # ------------------------------------------------------------- plumbing
+    def _stack(self, arr, idx, batch_size):
+        return stack_epoch(
+            arr, idx, batch_size, epoch_sharding(self.trainer, arr.ndim + 1)
+        )
+
+    # --------------------------------------------------------------- phases
+    def run_hidden_phase(
+        self, x, n, epochs, batch_size, shuffle, history, verbose
+    ) -> None:
+        net = self.net
+        for li, layer in enumerate(net.hidden_layers):
+            step = (
+                self.trainer.hidden_step(layer) if self.trainer is not None else None
+            )
+            epoch_fn = hidden_epoch_fn(layer, net.layers[:li], step_fn=step)
+            state = net.states[li]
+            if self.trainer is not None:
+                state = self.trainer.place_state(layer, state)
+            below_states = net.states[:li]
+            for epoch in range(epochs):
+                idx = net._epoch_indices(n, shuffle)
+                xs = self._stack(x, idx, batch_size)
+                state = epoch_fn(state, below_states, xs)
+                if verbose:
+                    print(f"[fit/scan] hidden layer {li} epoch {epoch + 1}/{epochs}")
+                history.append({"phase": f"hidden{li}", "epoch": epoch})
+            net.states[li] = state
+
+    def run_bcpnn_readout(
+        self, x, y, n, epochs, batch_size, shuffle, history, verbose
+    ) -> None:
+        net = self.net
+        layer = net.readout_layer
+        if layer is None:
+            return
+        li = len(net.layers) - 1
+        step = (
+            self.trainer.readout_step(layer) if self.trainer is not None else None
+        )
+        epoch_fn = readout_epoch_fn(layer, net.layers[:li], step_fn=step)
+        state = net.states[li]
+        if self.trainer is not None:
+            state = self.trainer.place_state(layer, state)
+        hidden_states = net.states[:li]
+        for epoch in range(epochs):
+            idx = net._epoch_indices(n, shuffle)
+            xs = self._stack(x, idx, batch_size)
+            ys = self._stack(y, idx, batch_size)
+            state = epoch_fn(state, hidden_states, xs, ys)
+            if verbose:
+                print(f"[fit/scan] readout epoch {epoch + 1}/{epochs}")
+            history.append({"phase": "readout", "epoch": epoch})
+        net.states[li] = state
+
+    def run_sgd_readout(
+        self, x, y, n, epochs, batch_size, shuffle, history, verbose, lr
+    ) -> dict:
+        from repro.core.network import sgd_readout_setup
+
+        net = self.net
+        n_hidden = net.hidden_layers[-1].spec.n_post
+        params, opt, opt_state, loss_fn = sgd_readout_setup(
+            net.seed, n_hidden, y, lr
+        )
+        epoch_fn = sgd_epoch_fn(opt, net.hidden_layers, loss_fn)
+        hidden_states = net.states[: len(net.hidden_layers)]
+        for epoch in range(epochs):
+            idx = net._epoch_indices(n, shuffle)
+            xs = self._stack(x, idx, batch_size)
+            ys = self._stack(y, idx, batch_size)
+            params, opt_state, losses = epoch_fn(
+                params, opt_state, hidden_states, xs, ys
+            )
+            if verbose:
+                print(
+                    f"[fit/scan] sgd readout epoch {epoch + 1}/{epochs} "
+                    f"loss={float(losses[-1]):.4f}"
+                )
+            history.append({"phase": "sgd_readout", "epoch": epoch})
+        return params

@@ -77,6 +77,17 @@ def train_loop(
             state = restore_checkpoint(path, {"params": params, "opt": opt_state})
             params, opt_state = state["params"], state["opt"]
 
+    # Snapshot the true step-`start_step` state: a failure before the first
+    # checkpoint lands must replay from HERE, not from the already-mutated
+    # live params (which would double-apply the replayed batches).  Copies
+    # guard against step_fn donating/aliasing the live buffers.
+    def _copy_tree(tree):
+        return jax.tree_util.tree_map(
+            lambda a: a.copy() if hasattr(a, "copy") else a, tree
+        )
+
+    initial_snapshot = _copy_tree({"params": params, "opt": opt_state})
+
     metrics_hist: List[Dict[str, float]] = []
     restarts = 0
     straggler_events = 0
@@ -111,7 +122,14 @@ def train_loop(
                 params, opt_state = state["params"], state["opt"]
                 step = ckpt_step
             else:
-                step = 0
+                # No checkpoint on disk yet: rewind to the pristine initial
+                # state, not to step 0 with the current (mutated) params.
+                state = _copy_tree(initial_snapshot)
+                params, opt_state = state["params"], state["opt"]
+                step = start_step
+            # Drop metrics from the rolled-back steps so the history stays
+            # monotonic in `step` (the replay re-records them).
+            metrics_hist = [m for m in metrics_hist if m["step"] < step]
             continue
 
         dt = time.perf_counter() - t0

@@ -1,0 +1,27 @@
+"""Shared pytest plumbing: centralized slow-test marking.
+
+The slowest tier-1 tests (per `--durations`) are tagged ``slow`` here rather
+than inline, because several are single parametrize cases of an otherwise
+fast class (e.g. the largest model-zoo archs).  The default run excludes
+them (see pytest.ini addopts); ``pytest -m slow`` runs just the slow set.
+"""
+import pytest
+
+# nodeid suffixes to tag as slow (matched with str.endswith so the hook is
+# rootdir-independent).
+SLOW_SUFFIXES = (
+    "test_models.py::TestArchSmoke::test_forward_and_train_step[deepseek-v2-236b]",
+    "test_models.py::TestArchSmoke::test_forward_and_train_step[zamba2-2.7b]",
+    "test_models.py::TestArchSmoke::test_forward_and_train_step[moonshot-v1-16b-a3b]",
+    "test_models.py::TestArchSmoke::test_forward_and_train_step[mamba2-1.3b]",
+    "test_models.py::TestArchSmoke::test_forward_and_train_step[seamless-m4t-large-v2]",
+    "test_distributed.py::test_sharded_train_step_matches_unsharded",
+    "test_distributed.py::test_moe_psum_and_a2a_match_local",
+    "test_perf_levers.py::TestCastOnce::test_loss_close_and_step_runs",
+)
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.nodeid.endswith(SLOW_SUFFIXES):
+            item.add_marker(pytest.mark.slow)

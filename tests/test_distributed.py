@@ -174,3 +174,47 @@ def test_elastic_checkpoint_restore_across_meshes():
                 np.asarray(out1["w"]), np.asarray(tree["w"]))
         print("elastic restore OK")
     """)
+
+
+def test_scan_engine_data_parallel_matches_single_device():
+    """The epoch engine threads DataParallelTrainer steps through its scan
+    bodies: a sharded scan epoch must match the single-device scan epoch."""
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (DenseLayer, Network, StructuralPlasticityLayer,
+                                UnitLayout, onehot_layout)
+        from repro.core.distributed import DataParallelTrainer
+        from repro.data import complementary_code, mnist_like
+
+        ds = mnist_like(n_train=256, n_test=32, n_features=16, seed=0)
+        x, layout = complementary_code(ds.x_train)
+
+        def build():
+            hidden = UnitLayout(4, 8)
+            net = Network(seed=0)
+            net.add(StructuralPlasticityLayer(layout, hidden, fan_in=8,
+                                              lam=0.05, init_jitter=1.0))
+            net.add(DenseLayer(hidden, onehot_layout(10), lam=0.05))
+            return net
+
+        kw = dict(epochs_hidden=2, epochs_readout=2, batch_size=64,
+                  engine="scan")
+        ref = build()
+        ref.fit((x, ds.y_train), **kw)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        for mode in ("shard_map", "pjit"):
+            net = build()
+            tr = DataParallelTrainer(mesh, mode=mode)
+            net.fit((x, ds.y_train), trainer=tr, **kw)
+            for sr, st in zip(ref.states, net.states):
+                np.testing.assert_allclose(
+                    np.asarray(jax.device_get(st.w)), np.asarray(sr.w),
+                    rtol=2e-4, atol=2e-5,
+                )
+                np.testing.assert_allclose(
+                    np.asarray(jax.device_get(st.marginals.cij)),
+                    np.asarray(sr.marginals.cij), rtol=2e-4, atol=1e-7,
+                )
+            print(mode, "OK")
+    """)

@@ -1,0 +1,170 @@
+"""Scan-based epoch engine: parity with the per-batch reference loop,
+batch-size clamping, epoch stacking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DenseLayer,
+    Network,
+    StructuralPlasticityLayer,
+    UnitLayout,
+    onehot_layout,
+)
+from repro.data import complementary_code, mnist_like
+from repro.runtime.epoch_engine import stack_epoch
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    ds = mnist_like(n_train=512, n_test=128, n_features=32, seed=0)
+    x, layout = complementary_code(ds.x_train)
+    return ds, x, layout
+
+
+def _build(layout, use_kernels=False, seed=0):
+    hidden = UnitLayout(4, 8)
+    net = Network(seed=seed)
+    net.add(
+        StructuralPlasticityLayer(
+            layout, hidden, fan_in=16, lam=0.05, init_jitter=1.0, gain=4.0,
+            use_kernels=use_kernels,
+        )
+    )
+    net.add(DenseLayer(hidden, onehot_layout(10), lam=0.05, use_kernels=use_kernels))
+    return net
+
+
+def _assert_states_match(a: Network, b: Network):
+    for sa, sb in zip(a.states, b.states):
+        np.testing.assert_allclose(
+            np.asarray(sa.w), np.asarray(sb.w), rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(sa.b), np.asarray(sb.b), rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(sa.marginals.ci), np.asarray(sb.marginals.ci),
+            rtol=1e-5, atol=1e-8,
+        )
+        np.testing.assert_allclose(
+            np.asarray(sa.marginals.cj), np.asarray(sb.marginals.cj),
+            rtol=1e-5, atol=1e-8,
+        )
+        np.testing.assert_allclose(
+            np.asarray(sa.marginals.cij), np.asarray(sb.marginals.cij),
+            rtol=1e-5, atol=1e-8,
+        )
+        assert int(sa.step) == int(sb.step)
+
+
+class TestScanParity:
+    """The engine must learn the same LayerState as the seed per-batch loop
+    (same shuffles, same per-batch math — only the dispatch changes)."""
+
+    @pytest.mark.parametrize("use_kernels", [False, True])
+    def test_hidden_and_bcpnn_readout(self, dataset, use_kernels):
+        ds, x, layout = dataset
+        ref = _build(layout, use_kernels)
+        eng = _build(layout, use_kernels)
+        kw = dict(epochs_hidden=2, epochs_readout=2, batch_size=64)
+        ref.fit((x, ds.y_train), engine="batch", **kw)
+        eng.fit((x, ds.y_train), engine="scan", **kw)
+        _assert_states_match(ref, eng)
+
+    def test_sgd_readout(self, dataset):
+        ds, x, layout = dataset
+        ref = _build(layout)
+        eng = _build(layout)
+        kw = dict(epochs_hidden=1, epochs_readout=3, batch_size=64, readout="sgd")
+        ref.fit((x, ds.y_train), engine="batch", **kw)
+        eng.fit((x, ds.y_train), engine="scan", **kw)
+        _assert_states_match(ref, eng)
+        np.testing.assert_allclose(
+            np.asarray(ref._sgd_readout["w"]), np.asarray(eng._sgd_readout["w"]),
+            rtol=1e-5, atol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(ref._sgd_readout["b"]), np.asarray(eng._sgd_readout["b"]),
+            rtol=1e-5, atol=1e-6,
+        )
+
+    def test_mask_rewire_parity(self, dataset):
+        """Structural-plasticity rewires (lax.cond on state.step) fire at the
+        same steps inside the scan as in the Python loop."""
+        ds, x, layout = dataset
+        ref = _build(layout)
+        eng = _build(layout)
+        # mask_update_every defaults to post.n_hcu=4 -> several rewires in
+        # 2 epochs x 8 batches.
+        kw = dict(epochs_hidden=2, epochs_readout=0, batch_size=64)
+        ref.fit((x, ds.y_train), engine="batch", **kw)
+        eng.fit((x, ds.y_train), engine="scan", **kw)
+        np.testing.assert_array_equal(
+            np.asarray(ref.states[0].plast.hcu_mask),
+            np.asarray(eng.states[0].plast.hcu_mask),
+        )
+        _assert_states_match(ref, eng)
+
+
+class TestFitEdgeCases:
+    def test_empty_dataset_raises(self, dataset):
+        _, x, layout = dataset
+        net = _build(layout)
+        with pytest.raises(ValueError, match="empty dataset"):
+            net.fit((x[:0], np.zeros((0,), np.int32)))
+
+    @pytest.mark.parametrize("engine", ["batch", "scan"])
+    def test_batch_size_clamped_to_dataset(self, dataset, engine):
+        """Regression: len(x) < batch_size used to round n down to 0 and
+        silently train on nothing."""
+        ds, x, layout = dataset
+        net = _build(layout)
+        res = net.fit(
+            (x[:40], ds.y_train[:40]), epochs_hidden=2, epochs_readout=2,
+            batch_size=128, engine=engine,
+        )
+        assert res.batch_size == 40
+        # Training actually happened: steps advanced and weights moved.
+        assert int(net.states[0].step) == 2
+        assert float(jnp.abs(net.states[0].w).max()) > 0
+
+    def test_ragged_tail_rotates_across_epochs(self, dataset):
+        """Regression: the ragged-tail trim used to permute only arange(n),
+        permanently excluding samples past the last full batch."""
+        ds, x, layout = dataset
+        net = _build(layout)
+        net.fit(
+            (x[:100], ds.y_train[:100]), epochs_hidden=1, epochs_readout=0,
+            batch_size=64,
+        )
+        seen = set()
+        for _ in range(10):
+            seen.update(net._epoch_indices(64, shuffle=True).tolist())
+        assert max(seen) > 63  # tail samples (64..99) get drawn
+
+    def test_unknown_engine_rejected(self, dataset):
+        ds, x, layout = dataset
+        with pytest.raises(ValueError, match="engine"):
+            _build(layout).fit((x, ds.y_train), engine="warp")
+
+
+class TestStackEpoch:
+    def test_shape_and_order(self):
+        x = np.arange(24, dtype=np.float32).reshape(12, 2)
+        idx = np.asarray([3, 1, 4, 1, 5, 9, 2, 6])
+        xs = stack_epoch(x, idx, batch_size=4)
+        assert xs.shape == (2, 4, 2)
+        np.testing.assert_array_equal(np.asarray(xs[0]), x[idx[:4]])
+        np.testing.assert_array_equal(np.asarray(xs[1]), x[idx[4:]])
+
+    def test_labels_1d(self):
+        y = np.arange(8, dtype=np.int32)
+        ys = stack_epoch(y, np.arange(8), batch_size=2)
+        assert ys.shape == (4, 2)
+
+    def test_ragged_epoch_rejected(self):
+        x = np.zeros((10, 3), np.float32)
+        with pytest.raises(ValueError, match="multiple"):
+            stack_epoch(x, np.arange(10), batch_size=4)

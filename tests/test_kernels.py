@@ -159,3 +159,14 @@ class TestKernelLayerIntegration:
             outs[use_k] = (np.asarray(st.w), np.asarray(aj))
         np.testing.assert_allclose(outs[True][0], outs[False][0], rtol=1e-4, atol=1e-5)
         np.testing.assert_allclose(outs[True][1], outs[False][1], rtol=1e-4, atol=1e-5)
+
+
+class TestBackendDispatch:
+    def test_interpret_tracks_backend_changes(self, monkeypatch):
+        """Regression: _interpret() was lru_cached at first call, so a later
+        platform change silently kept the stale Pallas mode."""
+        assert ops._interpret() is True  # container runs on CPU
+        monkeypatch.setattr(ops.jax, "default_backend", lambda: "tpu")
+        assert ops._interpret() is False
+        monkeypatch.undo()
+        assert ops._interpret() is True

@@ -221,6 +221,37 @@ class TestTrainLoop:
                 fail_injector=injector,
             )
 
+    def test_failure_before_first_checkpoint_replays_from_init(self, tmp_path):
+        """Regression: a failure before any checkpoint exists must rewind to
+        the *initial* params, not replay from step 0 with mutated params."""
+        from repro.runtime import TrainLoopConfig, train_loop
+
+        opt_state = {"m": jnp.zeros((1,), jnp.float32)}  # ignored by step_fn
+        params = {"w": jnp.zeros((1,), jnp.float32)}
+
+        def step_fn(p, s, batch):
+            return {"w": p["w"] + 1.0}, s, {"w": p["w"][0]}
+
+        failed = {"count": 0}
+
+        def injector(step):
+            if step == 3 and failed["count"] < 1:
+                failed["count"] += 1
+                raise RuntimeError("failure before first checkpoint")
+
+        res = train_loop(
+            step_fn, params, opt_state, lambda step: {},
+            # ckpt_every=100 >> total_steps: nothing on disk when we fail.
+            TrainLoopConfig(total_steps=5, ckpt_dir=str(tmp_path), ckpt_every=100),
+            fail_injector=injector,
+        )
+        assert failed["count"] == 1 and res.restarts == 1
+        # 5 effective steps from w=0 -> the last step sees w == 4.  With the
+        # old bug the replay started from w=3, ending at w == 7.
+        assert res.metrics[-1]["w"] == 4.0
+        # Rolled-back steps are dropped from the history: monotonic, no dups.
+        assert [m["step"] for m in res.metrics] == list(range(5))
+
     def test_resume_from_checkpoint(self, tmp_path):
         from repro.runtime import TrainLoopConfig, train_loop
 

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -r requirements-dev.txt)"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import UnitLayout, init_marginals, update_marginals, batch_means
