@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List
+from typing import Callable, List
 
 import jax
 import numpy as np

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.bench_common import emit, time_fn
-from repro.core import UnitLayout, init_marginals
+from repro.core import init_marginals
 from repro.kernels import ref
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 

@@ -10,7 +10,6 @@ from __future__ import annotations
 import time
 
 from benchmarks.bench_common import build_bcpnn, emit
-from repro.core import UnitLayout
 from repro.data import complementary_code, stl10_like
 
 

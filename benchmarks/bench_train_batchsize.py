@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.bench_common import build_bcpnn, emit, time_fn
 from repro.data import complementary_code, mnist_like
@@ -40,14 +39,16 @@ def run_engine_compare(
     epoch as one jitted lax.scan over a device-resident (n_batches, B, F)
     stack (repro.runtime.epoch_engine).
     """
+    from repro.core import ExecutionConfig
+
     ds = mnist_like(n_train=n_train, n_test=64, n_features=n_features, seed=0)
     x, layout = complementary_code(ds.x_train)
 
     def fit_time(engine, bs, e):
-        net = build_bcpnn(layout).build()
-        res = net.fit(
+        compiled = build_bcpnn(layout).compile(ExecutionConfig(engine=engine))
+        res = compiled.fit(
             (x, ds.y_train), epochs_hidden=e, epochs_readout=e,
-            batch_size=bs, readout=readout, engine=engine,
+            batch_size=bs, readout=readout,
         )
         return res.wall_time_s
 

@@ -5,11 +5,14 @@
 Trains the three-layer network (input -> hidden HCUs -> readout) with the
 unsupervised Hebbian rule + supervised readout on an MNIST-shaped synthetic
 dataset, then reports accuracy and shows the structural-plasticity mask.
+The model description is purely declarative; everything about execution
+(engine, distribution, precision) binds in the compile step.
 """
 import numpy as np
 
 from repro.core import (
     DenseLayer,
+    ExecutionConfig,
     Network,
     StructuralPlasticityLayer,
     UnitLayout,
@@ -40,17 +43,23 @@ def main():
     )
     model.add(DenseLayer(hidden, onehot_layout(10), lam=0.02))
 
-    # 3. Train (phase 1: unsupervised hidden; phase 2: supervised readout)
+    # 3. Compile: bind the declarative model to an execution strategy (the
+    #    scan epoch engine by default; add trainer=/precision= to deploy the
+    #    same model distributed or on the reduced-precision datapath).
+    compiled = model.compile(ExecutionConfig(engine="scan"))
+
+    # 4. Train (phase 1: unsupervised hidden; phase 2: supervised readout)
     #    and evaluate.
-    res = model.fit(
+    res = compiled.fit(
         (x_train, ds.y_train), epochs_hidden=5, epochs_readout=5,
         batch_size=128, verbose=True,
     )
-    acc = model.evaluate((x_test, ds.y_test))
+    acc = compiled.evaluate((x_test, ds.y_test))
     print(f"\ntrained in {res.wall_time_s:.1f}s — test accuracy: {acc:.3f}")
 
-    mask = model.states[0].plast.hcu_mask
-    print(f"receptive-field fan-in per hidden HCU: {np.asarray(fan_in(model.states[0].plast))}")
+    state0 = compiled.state.layers[0]
+    mask = state0.plast.hcu_mask
+    print(f"receptive-field fan-in per hidden HCU: {np.asarray(fan_in(state0.plast))}")
     print(f"mask shape {mask.shape}, active fraction {float(np.asarray(mask).mean()):.2f}")
 
 

@@ -2,17 +2,18 @@
 
     PYTHONPATH=src python examples/streaming_bcpnn.py
 
-Feeds single samples into a StreamingSession (which coalesces bursts into
+Compiles a declarative network once, then opens a StreamingSession from the
+compiled object — online updates share the compiled network's jitted cells,
+the per-shape jit cache is LRU-bounded, and close() writes the learned state
+back into the compiled NetworkState.  Feeds single samples (coalesced into
 micro-batches without changing the EWMA semantics), then runs single-sample
 inference — the paper's latency-oriented operation mode.
 """
 import time
 
-import jax
 import numpy as np
 
-from repro.core import StructuralPlasticityLayer, UnitLayout
-from repro.core.streaming import StreamingSession
+from repro.core import ExecutionConfig, Network, StructuralPlasticityLayer, UnitLayout
 from repro.data import complementary_code, mnist_like
 
 
@@ -21,11 +22,13 @@ def main():
     x, layout = complementary_code(ds.x_train)
 
     hidden = UnitLayout(8, 16)
-    layer = StructuralPlasticityLayer(
-        layout, hidden, fan_in=32, lam=0.05, gain=4.0, init_jitter=1.0
+    net = Network(seed=0).add(
+        StructuralPlasticityLayer(
+            layout, hidden, fan_in=32, lam=0.05, gain=4.0, init_jitter=1.0
+        )
     )
-    sess = StreamingSession(layer, layer.init(jax.random.PRNGKey(0)),
-                            max_batch=16)
+    compiled = net.compile(ExecutionConfig())
+    sess = compiled.streaming(max_batch=16)
 
     t0 = time.perf_counter()
     for row in x[:512]:
@@ -43,6 +46,10 @@ def main():
     print(f"single-sample inference: {n/dt:.0f} samples/s "
           f"(paper: 28k-87k img/s on V100/A100)")
     print(f"activation of sample 0 (first HCU): {np.round(out[:16], 3)}")
+    print(f"session stats: {sess.stats}")
+
+    sess.close()  # adopt the streamed state into compiled.state
+    print(f"compiled network now at step {int(compiled.state.layers[0].step)}")
 
 
 if __name__ == "__main__":

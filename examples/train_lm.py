@@ -14,7 +14,6 @@ import argparse
 import dataclasses
 
 import jax
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.data import lm_batches, token_stream

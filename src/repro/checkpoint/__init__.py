@@ -3,11 +3,14 @@ from repro.checkpoint.store import (
     AsyncCheckpointer,
     latest_checkpoint,
     list_checkpoints,
+    load_manifest,
     restore_checkpoint,
     save_checkpoint,
 )
+from repro.checkpoint.network import load_network, save_network
 
 __all__ = [
     "AsyncCheckpointer", "latest_checkpoint", "list_checkpoints",
-    "restore_checkpoint", "save_checkpoint",
+    "load_manifest", "restore_checkpoint", "save_checkpoint",
+    "load_network", "save_network",
 ]

@@ -1,0 +1,121 @@
+"""Whole-network checkpointing on top of repro.checkpoint.store.
+
+A network checkpoint is one atomic store checkpoint holding every layer's
+LayerState plus the optional hybrid (SGD) readout head, with the host-side
+shuffle-RNG state in the manifest's ``extra`` metadata — enough to resume
+``CompiledNetwork.fit`` mid-curriculum with identical shuffles and to make
+``evaluate()`` after load bit-identical to before save.
+
+Layout (flat keys inside arrays.npz):
+
+    layers/<i>/marginals/ci ...   per-layer LayerState leaves
+    readout/w, readout/b          hybrid readout params (when present)
+
+Restore validates layer-leaf shapes against the target network's templates,
+so loading a checkpoint into a mismatched architecture fails loudly.  The
+SGD optimizer state is deliberately NOT checkpointed (it is disposable
+momentum; a resumed fit re-initializes it).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import (
+    load_manifest,
+    restore_into_template,
+    save_checkpoint,
+)
+
+_VERSION = 1
+
+
+def _network_tree(layer_states: Sequence[Any], readout: Optional[dict]) -> dict:
+    tree = {"layers": {str(i): s for i, s in enumerate(layer_states)}}
+    if readout is not None:
+        tree["readout"] = readout
+    return tree
+
+
+def save_network(
+    directory: str,
+    step: int,
+    state,
+    rng_state: Optional[dict] = None,
+    retain: int = 3,
+) -> str:
+    """Atomically write a NetworkState (+ host RNG) checkpoint."""
+    extra = {
+        "network_ckpt_version": _VERSION,
+        "n_layers": len(state.layers),
+        "has_readout": state.readout is not None,
+        "rng_state": rng_state,
+    }
+    return save_checkpoint(
+        directory, step, _network_tree(state.layers, state.readout),
+        retain=retain, extra=extra,
+    )
+
+
+def load_network(
+    path: str,
+    layer_templates: Sequence[Any],
+    readout_in_features: Optional[int] = None,
+) -> Tuple[List[Any], Optional[dict], Optional[dict]]:
+    """Restore (layer_states, readout_params, rng_state) from a checkpoint.
+
+    layer_templates: the target network's current per-layer LayerStates —
+    their pytree structure and shapes define what is restored (elastic
+    device placement happens via plain device_put; re-shard afterwards with
+    a trainer's place_state if needed).
+    readout_in_features: expected input width of the SGD readout head (the
+    hidden stack's output units); when given, a mismatched head fails here
+    instead of as an opaque matmul error inside a later jitted predict.
+    """
+    manifest = load_manifest(path)
+    extra = manifest.get("extra", {})
+    version = extra.get("network_ckpt_version")
+    if version != _VERSION:
+        raise ValueError(
+            f"{path} is not a network checkpoint (version={version!r}); "
+            "use repro.checkpoint.restore_checkpoint for raw pytrees"
+        )
+    n_saved = extra.get("n_layers")
+    if n_saved != len(layer_templates):
+        raise ValueError(
+            f"checkpoint has {n_saved} layers, target network has "
+            f"{len(layer_templates)}"
+        )
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+
+    layer_states: List[Any] = [
+        restore_into_template(flat, template, prefix=f"layers/{i}/")
+        for i, template in enumerate(layer_templates)
+    ]
+
+    readout = None
+    if extra.get("has_readout"):
+        readout = {
+            k.split("/", 1)[1]: jax.device_put(v)
+            for k, v in flat.items()
+            if k.startswith("readout/")
+        }
+        if not readout:
+            raise KeyError("manifest says has_readout but no readout/* arrays")
+        w, b = readout.get("w"), readout.get("b")
+        if w is None or b is None or w.ndim != 2 or b.shape != (w.shape[1],):
+            raise ValueError(
+                f"malformed readout head in {path}: "
+                f"w={None if w is None else w.shape} "
+                f"b={None if b is None else b.shape}"
+            )
+        if readout_in_features is not None and w.shape[0] != readout_in_features:
+            raise ValueError(
+                f"readout head expects {w.shape[0]} hidden features, target "
+                f"network produces {readout_in_features}"
+            )
+    return layer_states, readout, extra.get("rng_state")

@@ -29,14 +29,20 @@ import numpy as np
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
+def path_key(path) -> str:
+    """Stable flat key for a pytree path (shared by save, restore, and the
+    whole-network checkpoint layer — one definition, or checkpoints written
+    and read by different call sites drift apart)."""
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+        for p in path
+    )
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-            for p in path
-        )
-        flat[key] = np.asarray(jax.device_get(leaf))
+        flat[path_key(path)] = np.asarray(jax.device_get(leaf))
     return flat
 
 
@@ -46,8 +52,13 @@ def save_checkpoint(
     tree: Any,
     retain: int = 3,
     _snapshot: Optional[Dict[str, np.ndarray]] = None,
+    extra: Optional[dict] = None,
 ) -> str:
-    """Write one checkpoint atomically; returns its final path."""
+    """Write one checkpoint atomically; returns its final path.
+
+    extra: optional JSON-serializable metadata stored in the manifest
+    (e.g. host RNG state, config fingerprints for whole-network saves).
+    """
     os.makedirs(directory, exist_ok=True)
     flat = _snapshot if _snapshot is not None else _flatten(tree)
     tmp = os.path.join(directory, f"tmp.{step}.{os.getpid()}")
@@ -61,6 +72,7 @@ def save_checkpoint(
         "keys": sorted(flat),
         "shapes": {k: list(v.shape) for k, v in flat.items()},
         "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+        "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -93,6 +105,48 @@ def latest_checkpoint(directory: str) -> Optional[Tuple[int, str]]:
     return ckpts[-1] if ckpts else None
 
 
+def load_manifest(path: str) -> dict:
+    """Read a checkpoint's manifest (keys/shapes/dtypes + extra metadata)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def restore_into_template(
+    flat: Dict[str, np.ndarray],
+    template: Any,
+    prefix: str = "",
+    shardings: Any = None,
+) -> Any:
+    """Rebuild `template`'s pytree from flat `path_key`-keyed arrays.
+
+    The one template-driven restoration loop (missing-key error, shape
+    check, device placement) — shared by :func:`restore_checkpoint` and the
+    whole-network loader so their behavior cannot drift.  `prefix` namespaces
+    the keys (e.g. ``"layers/0/"``).
+    """
+    leaves_paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    shard_leaves = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else None
+    )
+    new_leaves = []
+    for i, (path_t, leaf) in enumerate(leaves_paths):
+        key = prefix + path_key(path_t)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = flat[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs template {leaf.shape}"
+            )
+        if shard_leaves is not None:
+            arr = jax.device_put(arr, shard_leaves[i])
+        else:
+            arr = jax.device_put(arr)
+        new_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
 def restore_checkpoint(
     path: str,
     template: Any,
@@ -106,31 +160,7 @@ def restore_checkpoint(
     """
     with np.load(os.path.join(path, "arrays.npz")) as z:
         flat = {k: z[k] for k in z.files}
-    leaves_paths = jax.tree_util.tree_flatten_with_path(template)[0]
-    treedef = jax.tree_util.tree_structure(template)
-    shard_leaves = (
-        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else None
-    )
-    new_leaves = []
-    for i, (path_t, leaf) in enumerate(leaves_paths):
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-            for p in path_t
-        )
-        if key not in flat:
-            raise KeyError(f"checkpoint missing {key!r}")
-        arr = flat[key]
-        want_shape = tuple(jax.eval_shape(lambda x=leaf: x).shape) if hasattr(leaf, "shape") else None
-        if want_shape is not None and tuple(arr.shape) != tuple(leaf.shape):
-            raise ValueError(
-                f"shape mismatch for {key}: ckpt {arr.shape} vs template {leaf.shape}"
-            )
-        if shard_leaves is not None:
-            arr = jax.device_put(arr, shard_leaves[i])
-        else:
-            arr = jax.device_put(arr)
-        new_leaves.append(arr)
-    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return restore_into_template(flat, template, shardings=shardings)
 
 
 class AsyncCheckpointer:

@@ -14,7 +14,7 @@ so --arch treats them uniformly.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -16,6 +16,7 @@ from repro.core.learning import (
 from repro.core.plasticity import PlasticityState, full_mask, init_random_mask
 from repro.core.layers import BCPNNLayerSpec, DenseLayer, LayerState, StructuralPlasticityLayer
 from repro.core.network import FitResult, Network
+from repro.core.compiled import CompiledNetwork, ExecutionConfig, NetworkState
 
 __all__ = [
     "UnitLayout", "complementary_layout", "onehot_layout",
@@ -25,4 +26,5 @@ __all__ = [
     "PlasticityState", "full_mask", "init_random_mask",
     "BCPNNLayerSpec", "DenseLayer", "LayerState", "StructuralPlasticityLayer",
     "FitResult", "Network",
+    "CompiledNetwork", "ExecutionConfig", "NetworkState",
 ]

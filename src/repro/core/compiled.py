@@ -1,0 +1,565 @@
+"""The compile step: bind a declarative Network to one ExecutionPlan.
+
+Keras' real power is ``compile()`` — one place where execution strategy
+(backend, precision, distribution) binds to a declarative model.  Here:
+
+::
+
+    model = Network(seed=0)
+    model.add(StructuralPlasticityLayer(...))
+    model.add(DenseLayer(...))
+    compiled = model.compile(ExecutionConfig(
+        engine="scan",                       # or "batch" (reference loop)
+        trainer=DataParallelTrainer(mesh),   # the paper's MPI backend
+        precision=PrecisionPolicy.named("bf20"),  # FPGA datapath emulation
+    ))
+    compiled.fit((x, y), epochs_hidden=5, epochs_readout=5)
+    compiled.evaluate((x_test, y_test))
+    compiled.save("ckpts")                   # whole-network checkpoint
+    sess = compiled.streaming()              # online updates, same jit cells
+
+Everything execution-strategic lives in :class:`ExecutionConfig`; the
+``Network`` holds only the model description.  :class:`CompiledNetwork` owns
+a pure-functional :class:`NetworkState` pytree plus cached jitted callables
+for fit / partial_fit / predict / evaluate — nothing re-traces across calls
+unless the input schema changes (jit's own cache handles shape/structure
+variation within one cached callable).
+
+The legacy ``Network.fit(engine=..., trainer=...)`` signature survives as a
+deprecated shim that compiles on the fly and copies learned state back;
+parity is asserted in tests/test_compile_api.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from copy import copy as _shallow_copy
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layers import DenseLayer, LayerState, StructuralPlasticityLayer
+from repro.runtime.plans import PLANS, ExecutionPlan, make_plan
+
+READOUTS = ("bcpnn", "sgd")
+
+
+def build_forward(layers) -> Callable:
+    """One jitted full-network forward ``(states, readout_params, xb)``.
+
+    Shared by CompiledNetwork.predict and the legacy Network.predict shim —
+    a single definition keeps the two surfaces bit-identical.  The optional
+    SGD head is an *argument*, so the bcpnn<->sgd readout switch is handled
+    by jit's own trace cache without a Python-level rebuild.  The head was
+    trained on the output of the FULL hidden stack, so only a trailing
+    DenseLayer is skipped when the head is active — never a hidden layer.
+    """
+    n_hidden = len(layers) - 1 if isinstance(layers[-1], DenseLayer) else len(layers)
+
+    def fwd(states, readout_params, xb):
+        h = xb
+        for layer, state in zip(layers[:n_hidden], states[:n_hidden]):
+            h = layer.forward(state, h)
+        if readout_params is not None:
+            return h @ readout_params["w"] + readout_params["b"]
+        if n_hidden < len(layers):
+            return layers[-1].forward(states[-1], h)
+        return h
+
+    return jax.jit(fwd)
+
+
+class NetworkState(NamedTuple):
+    """The whole network's learnable state — one pytree.
+
+    ``layers``: per-layer :class:`LayerState`; ``readout``: the hybrid SGD
+    readout params (``{"w", "b"}``) or None when the BCPNN DenseLayer readout
+    is in use.  Host-side RNG state rides along in checkpoints (manifest
+    metadata), not in the pytree.
+    """
+
+    layers: Tuple[LayerState, ...]
+    readout: Optional[dict]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """Everything about *how* a network executes, none of *what* it is.
+
+    engine:      "scan" (device-resident epoch scans, default) or "batch"
+                 (per-batch reference loop).
+    trainer:     optional repro.core.distributed.DataParallelTrainer — the
+                 paper's MPI backend as a plan decorator.
+    precision:   optional PrecisionPolicy (or format name str, e.g. "bf20")
+                 bound to EVERY layer's datapath at compile time — the
+                 paper's deployment-time FPGA precision choice.
+    use_kernels: optional bool overriding every layer's Pallas-kernel flag
+                 (None leaves the declared per-layer setting).
+    donate:      donate scan carries/epoch buffers on accelerators.
+    """
+
+    engine: str = "scan"
+    trainer: Any = None
+    precision: Any = None
+    use_kernels: Optional[bool] = None
+    donate: bool = True
+
+    def __post_init__(self):
+        # Validate against the plan registry — the single source of truth —
+        # so registering a new ExecutionPlan automatically extends configs.
+        if self.engine not in PLANS:
+            raise ValueError(
+                f"Unknown engine {self.engine!r} (want one of {sorted(PLANS)})"
+            )
+        if isinstance(self.precision, str):
+            from repro.precision.policy import PrecisionPolicy
+
+            object.__setattr__(
+                self, "precision", PrecisionPolicy.named(self.precision)
+            )
+
+    def bind_layer(self, layer):
+        """A copy of ``layer`` with this config's precision/kernel choices
+        bound into its spec (the declarative layer is never mutated)."""
+        overrides = {}
+        if self.precision is not None:
+            overrides["precision"] = self.precision
+        if self.use_kernels is not None:
+            overrides["use_kernels"] = self.use_kernels
+        if not overrides:
+            return layer
+        bound = _shallow_copy(layer)
+        bound.spec = dataclasses.replace(layer.spec, **overrides)
+        return bound
+
+
+class CompiledNetwork:
+    """A Network bound to one ExecutionPlan, owning state + jitted callables."""
+
+    def __init__(self, network, config: Optional[ExecutionConfig] = None,
+                 rng: Optional[np.random.Generator] = None):
+        self.network = network
+        self.config = config if config is not None else ExecutionConfig()
+        network.build()
+        self.layers = [self.config.bind_layer(l) for l in network.layers]
+        # Copy the initial states: the scan plan donates its state carry on
+        # accelerators, so aliasing network.states here would invalidate the
+        # declarative Network's buffers on the first fit (breaking repeated
+        # compiles of one Network, e.g. the precision-sweep pattern).
+        self.state = NetworkState(
+            layers=tuple(
+                jax.tree_util.tree_map(jnp.array, s) for s in network.states
+            ),
+            readout=None,
+        )
+        self.plan: ExecutionPlan = make_plan(
+            self.config.engine, self.layers, donate=self.config.donate
+        )
+        if self.config.trainer is not None:
+            self.plan = self.config.trainer.decorate(self.plan)
+        self._rng = rng if rng is not None else np.random.default_rng(network.seed)
+        # Cached jitted callables (satellite: predict used to re-jit per call).
+        self._fwd: Optional[Callable] = None
+        # Hybrid-readout machinery cached across fit/partial_fit calls.
+        self._sgd_cache: dict = {}
+        self._sgd_opt_state = None
+        # Per-layer LRU of per-shape streaming cells, shared by every session
+        # this compiled network opens (see streaming()).
+        self._stream_train_cells: dict = {}
+        self._stream_infer_cells: dict = {}
+
+    # ------------------------------------------------------------ structure
+    @property
+    def hidden_layers(self) -> List[StructuralPlasticityLayer]:
+        return self.plan.hidden_layers
+
+    @property
+    def readout_layer(self) -> Optional[DenseLayer]:
+        return self.plan.readout_layer
+
+    # -------------------------------------------------------------- forward
+    def _forward_fn(self) -> Callable:
+        """The jitted full-network forward, built exactly once per compile
+        (see :func:`build_forward`)."""
+        if self._fwd is None:
+            self._fwd = build_forward(self.layers)
+        return self._fwd
+
+    def predict(self, x, batch_size: int = 1024) -> jnp.ndarray:
+        """Class scores for a batch of inputs (whole stack, cached jit)."""
+        fwd = self._forward_fn()
+        outs = []
+        for i in range(0, x.shape[0], batch_size):
+            outs.append(
+                fwd(self.state.layers, self.state.readout,
+                    jnp.asarray(x[i : i + batch_size]))
+            )
+        return jnp.concatenate(outs, axis=0)
+
+    def evaluate(self, dataset, batch_size: int = 1024) -> float:
+        """Classification accuracy (argmax over output units)."""
+        x, y = dataset
+        scores = self.predict(x, batch_size=batch_size)
+        pred = np.asarray(jnp.argmax(scores, axis=-1))
+        return float(np.mean(pred == np.asarray(y)))
+
+    # ------------------------------------------------------------- training
+    def fit(
+        self,
+        dataset,
+        epochs_hidden: int = 10,
+        epochs_readout: int = 10,
+        batch_size: int = 128,
+        readout: str = "bcpnn",
+        readout_lr: float = 1e-3,
+        shuffle: bool = True,
+        verbose: bool = False,
+    ):
+        """Two-phase BCPNN training (Alg. 1 + supervised readout) through the
+        compiled plan.  Engine, trainer, and precision were fixed at compile
+        time; only training-objective knobs remain here."""
+        from repro.core.network import FitResult
+
+        t0 = time.perf_counter()
+        history: List[dict] = []
+        self._run(
+            dataset, epochs_hidden, epochs_readout, batch_size, readout,
+            readout_lr, shuffle, verbose, history, reset_readout=True,
+        )
+        return FitResult(
+            epochs_hidden=epochs_hidden,
+            epochs_readout=epochs_readout,
+            batch_size=min(batch_size, dataset[0].shape[0]),
+            wall_time_s=time.perf_counter() - t0,
+            history=history,
+        )
+
+    def partial_fit(
+        self,
+        dataset,
+        batch_size: int = 128,
+        readout: Optional[str] = None,
+        readout_lr: float = 1e-3,
+        shuffle: bool = False,
+        verbose: bool = False,
+    ):
+        """One incremental pass over a data chunk: each hidden layer gets one
+        Hebbian epoch on the chunk, plus one readout epoch when ``readout``
+        is given.  SGD-readout params and optimizer state persist across
+        calls, so repeated partial_fit converges like a streamed fit; all
+        jitted epoch callables are shared with fit().
+
+        Shape-stable execution trains ``(len(chunk) // batch_size) *
+        batch_size`` samples per call: a ragged tail is dropped (reported as
+        a ``ragged_tail_dropped`` history entry) — size chunks as multiples
+        of ``batch_size`` to train on everything."""
+        from repro.core.network import FitResult
+
+        t0 = time.perf_counter()
+        history: List[dict] = []
+        self._run(
+            dataset, 1, 1 if readout is not None else 0, batch_size,
+            readout or "bcpnn", readout_lr, shuffle, verbose, history,
+            reset_readout=False,
+        )
+        return FitResult(
+            epochs_hidden=1,
+            epochs_readout=1 if readout is not None else 0,
+            batch_size=min(batch_size, dataset[0].shape[0]),
+            wall_time_s=time.perf_counter() - t0,
+            history=history,
+        )
+
+    # The one training driver: both engines, both readouts, fit+partial_fit.
+    def _run(
+        self, dataset, epochs_hidden, epochs_readout, batch_size, readout,
+        readout_lr, shuffle, verbose, history, reset_readout,
+    ) -> None:
+        x, y = dataset
+        n_total = x.shape[0]
+        if n_total == 0:
+            raise ValueError("fit() called with an empty dataset")
+        if readout not in READOUTS:
+            raise ValueError(
+                f"Unknown readout {readout!r} (want one of {READOUTS})"
+            )
+        # A batch size larger than the dataset would round n down to zero and
+        # silently train on nothing — clamp to the dataset size instead.
+        batch_size = min(batch_size, n_total)
+        # Keep step functions shape-stable under jit: each epoch uses n
+        # samples (a multiple of B).  _epoch_indices permutes the FULL
+        # dataset before truncating, so a different ragged tail is left out
+        # each epoch and no sample is permanently excluded.  partial_fit
+        # makes exactly one pass, so its dropped tail is deterministic —
+        # surface it rather than lose data silently.
+        n = (n_total // batch_size) * batch_size
+        if not reset_readout and n < n_total:
+            history.append(
+                {"phase": "ragged_tail_dropped", "samples": n_total - n}
+            )
+
+        states = list(self.state.layers)
+        plan = self.plan
+
+        # Phase 1: unsupervised, layer by layer (greedy stacking).
+        for li, layer in enumerate(self.hidden_layers):
+            run_epoch = plan.hidden_epoch(li)
+            state = self._donation_safe(plan.place_state(layer, states[li]))
+            below_states = states[:li]
+            for epoch in range(epochs_hidden):
+                idx = self._epoch_indices(n, n_total, shuffle)
+                state = run_epoch(state, below_states, x, idx, batch_size)
+                if verbose:
+                    print(
+                        f"[fit/{plan.name}] hidden layer {li} epoch "
+                        f"{epoch + 1}/{epochs_hidden}"
+                    )
+                history.append({"phase": f"hidden{li}", "epoch": epoch})
+            states[li] = state
+            # Publish each finished layer immediately so an exception in a
+            # later phase leaves self.state referencing only live buffers
+            # (the scan plan donates its carries on accelerators).
+            self.state = NetworkState(tuple(states), self.state.readout)
+
+        # Phase 2: supervised readout on frozen hidden representations.
+        # (readout="sgd" with zero epochs still initializes the readout head,
+        # matching the legacy fit path.)  A stale SGD head is only dropped
+        # below, AFTER a BCPNN readout actually trains a replacement — never
+        # unconditionally, which would leave headless networks (or
+        # epochs_readout=0 fits) with no classifier at all.
+        readout_params = self.state.readout
+        wants_readout = epochs_readout > 0 or readout == "sgd"
+        if wants_readout and y is None:
+            raise ValueError(
+                "readout training requires labels: pass (x, y), or run "
+                "hidden-only with epochs_readout=0 (fit) / readout=None "
+                "(partial_fit)"
+            )
+        if wants_readout:
+            if readout == "bcpnn":
+                states = self._run_bcpnn_readout(
+                    states, x, y, n, n_total, epochs_readout, batch_size,
+                    shuffle, history, verbose,
+                )
+                # Training the BCPNN readout makes the DenseLayer
+                # authoritative — drop any SGD head so predict() sees the
+                # work just done (also on incremental partial_fit calls).
+                if self.readout_layer is not None:
+                    readout_params = None
+            else:
+                readout_params = self._run_sgd_readout(
+                    states, x, y, n, n_total, epochs_readout, batch_size,
+                    shuffle, history, verbose, readout_lr, reset_readout,
+                )
+
+        self.state = NetworkState(layers=tuple(states), readout=readout_params)
+
+    def _run_bcpnn_readout(
+        self, states, x, y, n, n_total, epochs, batch_size, shuffle, history,
+        verbose,
+    ):
+        layer = self.readout_layer
+        if layer is None:
+            return states
+        li = len(self.layers) - 1
+        run_epoch = self.plan.readout_epoch()
+        state = self._donation_safe(self.plan.place_state(layer, states[li]))
+        hidden_states = states[:li]
+        for epoch in range(epochs):
+            idx = self._epoch_indices(n, n_total, shuffle)
+            state = run_epoch(state, hidden_states, x, y, idx, batch_size)
+            if verbose:
+                print(f"[fit/{self.plan.name}] readout epoch {epoch + 1}/{epochs}")
+            history.append({"phase": "readout", "epoch": epoch})
+        states[li] = state
+        return states
+
+    def _run_sgd_readout(
+        self, states, x, y, n, n_total, epochs, batch_size, shuffle, history,
+        verbose, lr, reset,
+    ) -> dict:
+        """Hybrid readout: AdamW + cross-entropy on frozen hidden reps — the
+        paper's 97.5%+ MNIST configuration."""
+        from repro.core.network import sgd_readout_setup
+
+        n_hidden = self.hidden_layers[-1].spec.n_post
+        # Size the head from the declared output layout, not this batch's
+        # labels: a partial_fit chunk missing the high classes must not lock
+        # the head too narrow (later labels would silently clamp under jit).
+        if self.readout_layer is not None:
+            n_classes = self.readout_layer.spec.n_post
+        elif not reset and self.state.readout is not None:
+            # Headless network resuming an existing head: the head width is
+            # fixed; out-of-range labels must fail loudly, not clamp.
+            n_classes = int(self.state.readout["w"].shape[1])
+            y_max = int(np.max(y))
+            if y_max >= n_classes:
+                raise ValueError(
+                    f"label {y_max} exceeds the SGD head's {n_classes} "
+                    "classes (a headless network's head is sized by its "
+                    "first fit); declare a DenseLayer readout or run a full "
+                    "fit() covering the label range"
+                )
+        else:
+            n_classes = int(np.max(y)) + 1
+        key = (n_hidden, n_classes, lr)
+        resume = not reset and self.state.readout is not None
+        cached = self._sgd_cache.get(key)
+        if cached is None:
+            # Resume paths only need opt/loss_fn — skip the random head init.
+            params, opt, opt_state, loss_fn = sgd_readout_setup(
+                self.network.seed, n_hidden, y, lr, n_classes=n_classes,
+                init_params=not resume,
+            )
+            run_epoch = self.plan.sgd_epoch(opt, loss_fn)
+            self._sgd_cache[key] = (opt, loss_fn, run_epoch)
+        else:
+            opt, loss_fn, run_epoch = cached
+            params = opt_state = None
+        if resume:
+            # Resume the stored head (fresh moments if none survive, e.g.
+            # right after a checkpoint load).  The scan plan donates the
+            # params/opt_state carries, so hand it copies, not the stored
+            # buffers themselves.
+            params = self._donation_safe(self.state.readout)
+            opt_state = (
+                self._donation_safe(self._sgd_opt_state)
+                if self._sgd_opt_state is not None
+                else opt.init(params)
+            )
+        elif params is None:
+            # Cached epoch fn but a fresh trajectory: re-init params/moments.
+            params, _, opt_state, _ = sgd_readout_setup(
+                self.network.seed, n_hidden, y, lr, n_classes=n_classes
+            )
+
+        hidden_states = states[: len(self.hidden_layers)]
+        for epoch in range(epochs):
+            idx = self._epoch_indices(n, n_total, shuffle)
+            params, opt_state, loss = run_epoch(
+                params, opt_state, hidden_states, x, y, idx, batch_size
+            )
+            if verbose:
+                print(
+                    f"[fit/{self.plan.name}] sgd readout epoch "
+                    f"{epoch + 1}/{epochs} loss={float(loss):.4f}"
+                )
+            history.append({"phase": "sgd_readout", "epoch": epoch})
+        self._sgd_opt_state = opt_state
+        return params
+
+    def _donation_safe(self, state):
+        """A copy of ``state`` when the plan will donate its carry, so the
+        buffers still referenced by ``self.state`` (and by any failed-run
+        survivor) are never deleted.  Applies with or without a trainer:
+        place_state's device_put is an aliasing no-op once the state already
+        carries the target sharding (e.g. on a second fit).  No-op wherever
+        donation is inert (CPU, batch plan, donate=False)."""
+        if (
+            self.plan.name == "scan"
+            and self.config.donate
+            and jax.default_backend() != "cpu"
+        ):
+            return jax.tree_util.tree_map(jnp.array, state)
+        return state
+
+    def _epoch_indices(self, n: int, n_total: int, shuffle: bool) -> np.ndarray:
+        """First `n` indices of a full-dataset permutation (rotates which
+        ragged-tail samples sit out each epoch)."""
+        if not shuffle:
+            return np.arange(n)
+        return self._rng.permutation(n_total)[:n]
+
+    # ------------------------------------------------------------ streaming
+    def streaming(
+        self,
+        layer: int = 0,
+        max_batch: int = 16,
+        max_wait_s: float = 0.0,
+        cache_size: int = 8,
+    ):
+        """A StreamingSession over hidden layer ``layer`` whose per-shape
+        jitted cells live in this compiled network's own LRU (so several
+        sessions share one bounded trace cache — each distinct micro-batch
+        size is a separate jit wrapper, and eviction really frees its traces)
+        and whose learned state is written back into ``self.state`` on
+        close()."""
+        from repro.core.streaming import StreamingSession, _LRUCells
+
+        bound = self.hidden_layers[layer]
+        li = self.layers.index(bound)
+        # The session gets its own copy of the layer state: a later fit()
+        # donates self.state.layers[li] on accelerators, which would delete
+        # the buffer out from under a live session if it were shared.
+        session_state = jax.tree_util.tree_map(jnp.array, self.state.layers[li])
+        train_lru = self._stream_train_cells.setdefault(li, _LRUCells(cache_size))
+        infer_lru = self._stream_infer_cells.setdefault(li, _LRUCells(cache_size))
+        # The shared LRUs are handed to the session as ITS caches (no
+        # session-private copy), so the latest cache_size governs the one
+        # real bound and stats/eviction behavior agree across sessions.
+        train_lru.set_capacity(cache_size)
+        infer_lru.set_capacity(cache_size)
+
+        base_step = int(self.state.layers[li].step)  # for conflict detection
+
+        def adopt(state):
+            # Compare step COUNTERS, not object identity: fit republishes
+            # value-identical copies of untouched layers (donation safety),
+            # which must not read as a conflict.
+            if int(self.state.layers[li].step) != base_step:
+                import warnings
+
+                warnings.warn(
+                    "StreamingSession.close(): this layer trained elsewhere "
+                    "(another session or a fit) since the session opened; "
+                    "overwriting those updates with this session's result",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+            layers = list(self.state.layers)
+            layers[li] = state
+            self.state = NetworkState(tuple(layers), self.state.readout)
+
+        # The session's default factories already build exactly the cells we
+        # want from `bound`; only the shared LRUs and adoption are injected.
+        return StreamingSession(
+            bound,
+            session_state,
+            max_batch=max_batch,
+            max_wait_s=max_wait_s,
+            cache_size=cache_size,
+            train_cells=train_lru,
+            infer_cells=infer_lru,
+            on_close=adopt,
+        )
+
+    # ----------------------------------------------------------- checkpoint
+    def save(self, directory: str, step: int = 0, retain: int = 3) -> str:
+        """Whole-network checkpoint: layer states + sgd-readout params + the
+        host shuffle RNG, atomically via repro.checkpoint.store."""
+        from repro.checkpoint.network import save_network
+
+        return save_network(
+            directory, step, self.state, self._rng.bit_generator.state,
+            retain=retain,
+        )
+
+    def load(self, path: str) -> "CompiledNetwork":
+        """Restore a whole-network checkpoint written by :meth:`save` into
+        this compiled network (architectures must match)."""
+        from repro.checkpoint.network import load_network
+
+        layer_states, readout, rng_state = load_network(
+            path, list(self.state.layers),
+            readout_in_features=self.hidden_layers[-1].spec.n_post
+            if self.hidden_layers else None,
+        )
+        self.state = NetworkState(layers=tuple(layer_states), readout=readout)
+        # Optimizer moments belong to the pre-load trajectory; a resumed
+        # SGD-readout fit must re-initialize them.
+        self._sgd_opt_state = None
+        if rng_state is not None:
+            self._rng.bit_generator.state = rng_state
+        return self

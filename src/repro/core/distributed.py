@@ -24,7 +24,6 @@ flat MPI scheme cannot express.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -93,6 +92,15 @@ class DataParallelTrainer:
         self.baxes = batch_axes(mesh)
         if not self.baxes:
             raise ValueError(f"mesh {mesh.axis_names} has no pod/data axis")
+
+    # ------------------------------------------------------- plan decoration
+    def decorate(self, plan):
+        """Bind this trainer into an ExecutionPlan (repro.runtime.plans):
+        every per-batch transition the plan compiles becomes the sharded
+        shard_map/pjit step, and (for the scan plan) states and stacked
+        epochs are placed with this trainer's shardings.  Invoked by
+        ``Network.compile(ExecutionConfig(trainer=...))``."""
+        return plan.bind_trainer(self)
 
     # -------------------------------------------------------------- helpers
     def _state_spec(self, layer, shard_hidden: bool) -> LayerState:

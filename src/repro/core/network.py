@@ -5,8 +5,15 @@
     model = Network()
     model.add(StructuralPlasticityLayer(...))   # input -> hidden, unsupervised
     model.add(DenseLayer(...))                  # hidden -> output, supervised
-    model.fit(dataset=(x, y), ...)
-    model.evaluate(dataset=(x_test, y_test))
+    compiled = model.compile(ExecutionConfig(engine="scan"))
+    compiled.fit(dataset=(x, y), ...)
+    compiled.evaluate(dataset=(x_test, y_test))
+
+``Network`` is purely declarative: layers plus a seed.  Everything about
+*execution* — scan vs per-batch engine, data/model-parallel trainer,
+reduced-precision datapath, Pallas kernels, buffer donation — binds in the
+compile step (:mod:`repro.core.compiled`), exactly as the paper treats
+backend and precision as a deployment choice rather than a call-site choice.
 
 Training is the paper's two-phase scheme: (1) unsupervised Hebbian epochs on
 every hidden (plasticity) layer, in order, each trained on the activations of
@@ -15,16 +22,16 @@ final DenseLayer on frozen hidden representations.  A *hybrid* readout
 (``fit(readout="sgd")``) replaces phase 2 with AdamW cross-entropy training of
 a linear softmax readout — the configuration the paper reports at 97.5%+.
 
-The class is a thin imperative veneer: all state lives in functional
-``LayerState`` pytrees and all per-batch work happens inside jitted
-transition functions, so the same code path runs on CPU, TPU, and under the
-distributed wrappers in :mod:`repro.core.distributed`.
+The legacy imperative surface (``Network.fit(engine=..., trainer=...)``,
+``Network.predict/evaluate``) survives as a deprecated shim that compiles on
+the fly and copies learned state back; tests assert it is bit-compatible
+with the explicit compile path.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +42,7 @@ from repro.core.layers import DenseLayer, LayerState, StructuralPlasticityLayer
 
 @dataclasses.dataclass
 class FitResult:
-    """Bookkeeping returned by :meth:`Network.fit`."""
+    """Bookkeeping returned by ``fit``/``partial_fit``."""
 
     epochs_hidden: int
     epochs_readout: int
@@ -44,23 +51,35 @@ class FitResult:
     history: List[dict]
 
 
-def sgd_readout_setup(seed: int, n_hidden: int, y: np.ndarray, lr: float):
-    """Hybrid-readout initialization shared by both fit engines.
+def sgd_readout_setup(
+    seed: int, n_hidden: int, y: np.ndarray, lr: float,
+    n_classes: Optional[int] = None,
+    init_params: bool = True,
+):
+    """Hybrid-readout initialization shared by both execution plans.
 
     Returns (params, opt, opt_state, loss_fn) for the AdamW cross-entropy
     readout.  Single source of truth for the hyperparameters — the per-batch
     loop and the scan engine must stay numerically interchangeable.
+    n_classes defaults to the labels' range; pass the declared output width
+    when the batch at hand may not contain every class (partial_fit chunks).
+    init_params=False skips the random head/moment initialization (params
+    and opt_state come back None) for resume paths that only need
+    opt/loss_fn.
     """
     from repro.optim import adamw  # local import: optim is a sibling package
 
-    n_classes = int(np.max(y)) + 1
-    key = jax.random.PRNGKey(seed + 1)
-    params = {
-        "w": jax.random.normal(key, (n_hidden, n_classes), jnp.float32)
-        * (1.0 / np.sqrt(n_hidden)),
-        "b": jnp.zeros((n_classes,), jnp.float32),
-    }
+    if n_classes is None:
+        n_classes = int(np.max(y)) + 1
     opt = adamw.AdamW(learning_rate=lr, weight_decay=1e-4)
+    params = None
+    if init_params:
+        key = jax.random.PRNGKey(seed + 1)
+        params = {
+            "w": jax.random.normal(key, (n_hidden, n_classes), jnp.float32)
+            * (1.0 / np.sqrt(n_hidden)),
+            "b": jnp.zeros((n_classes,), jnp.float32),
+        }
 
     def loss_fn(p, hb, yb):
         logits = hb @ p["w"] + p["b"]
@@ -68,11 +87,17 @@ def sgd_readout_setup(seed: int, n_hidden: int, y: np.ndarray, lr: float):
         ll = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
         return jnp.mean(logz - ll)
 
-    return params, opt, opt.init(params), loss_fn
+    opt_state = opt.init(params) if params is not None else None
+    return params, opt, opt_state, loss_fn
 
 
 class Network:
-    """A sequential BCPNN network (hidden plasticity layers + one readout)."""
+    """A sequential BCPNN network (hidden plasticity layers + one readout).
+
+    Declarative only: add layers, then :meth:`compile` with an
+    :class:`repro.core.compiled.ExecutionConfig` to get a
+    :class:`repro.core.compiled.CompiledNetwork` that trains and serves.
+    """
 
     def __init__(self, seed: int = 0, precision=None):
         self.layers: List[Any] = []
@@ -81,8 +106,9 @@ class Network:
         self.precision = precision  # Optional repro.precision.PrecisionPolicy
         self._rng = np.random.default_rng(seed)
         self._built = False
-        # Hybrid (SGD) readout state, populated by fit(readout="sgd").
+        # Legacy-shim state (populated by the deprecated fit()).
         self._sgd_readout: Optional[dict] = None
+        self._fwd_jit: Optional[Callable] = None
 
     # ------------------------------------------------------------------ DSL
     def add(self, layer) -> "Network":
@@ -108,6 +134,19 @@ class Network:
         self._built = True
         return self
 
+    def compile(self, config=None):
+        """Bind this model description to an execution strategy.
+
+        config: :class:`repro.core.compiled.ExecutionConfig` (or None for the
+        defaults: scan engine, single device, declared per-layer precision).
+        Returns a :class:`repro.core.compiled.CompiledNetwork` owning a
+        functional NetworkState pytree and cached jitted callables for
+        fit / partial_fit / predict / evaluate / save / load / streaming.
+        """
+        from repro.core.compiled import CompiledNetwork
+
+        return CompiledNetwork(self, config)
+
     @property
     def hidden_layers(self) -> List[StructuralPlasticityLayer]:
         return [l for l in self.layers if isinstance(l, StructuralPlasticityLayer)]
@@ -116,40 +155,29 @@ class Network:
     def readout_layer(self) -> Optional[DenseLayer]:
         return self.layers[-1] if isinstance(self.layers[-1], DenseLayer) else None
 
-    # ----------------------------------------------------------- forward ops
-    def _hidden_forward(self, x: jnp.ndarray, upto: Optional[int] = None) -> jnp.ndarray:
-        """Run x through the (frozen) hidden stack below layer index `upto`."""
-        n = len(self.hidden_layers) if upto is None else upto
-        for layer, state in zip(self.layers[:n], self.states[:n]):
-            x = layer.forward(state, x)
-        return x
-
+    # ---------------------------------------------------- legacy (deprecated)
     def predict(self, x: jnp.ndarray, batch_size: int = 1024) -> jnp.ndarray:
-        """Class scores for a batch of inputs (runs the whole stack)."""
+        """Class scores for a batch of inputs (runs the whole stack).
+
+        The jitted forward is built once and cached on the instance (it takes
+        the states and the optional SGD head as arguments, so state updates
+        and the bcpnn<->sgd readout switch reuse the same callable).
+        """
         self.build()
+        if self._fwd_jit is None:
+            from repro.core.compiled import build_forward
+
+            self._fwd_jit = build_forward(self.layers)
         outs = []
-        fwd = self._jit_full_forward()
         for i in range(0, x.shape[0], batch_size):
-            outs.append(fwd(self.states, jnp.asarray(x[i : i + batch_size])))
+            outs.append(
+                self._fwd_jit(
+                    tuple(self.states), self._sgd_readout,
+                    jnp.asarray(x[i : i + batch_size]),
+                )
+            )
         return jnp.concatenate(outs, axis=0)
 
-    def _jit_full_forward(self) -> Callable:
-        layers = self.layers
-        sgd = self._sgd_readout
-
-        def fwd(states, xb):
-            h = xb
-            for layer, state in zip(layers[:-1], states[:-1]):
-                h = layer.forward(state, h)
-            if sgd is not None:
-                return h @ sgd["w"] + sgd["b"]
-            if isinstance(layers[-1], DenseLayer):
-                return layers[-1].forward(states[-1], h)
-            return layers[-1].forward(states[-1], h)
-
-        return jax.jit(fwd)
-
-    # ------------------------------------------------------------- training
     def fit(
         self,
         dataset: Tuple[np.ndarray, np.ndarray],
@@ -163,166 +191,40 @@ class Network:
         trainer=None,
         engine: str = "scan",
     ) -> FitResult:
-        """Two-phase BCPNN training (Alg. 1 + supervised readout).
+        """DEPRECATED shim over the compile step.
 
-        dataset: (x, y) with x float (n, n_features_units) already unit-coded
-        (see repro.data.coding) and y integer class labels (n,).
-        trainer: optional repro.core.distributed.DataParallelTrainer that
-        replaces the per-batch jitted step with a sharded one.
-        engine: "scan" (default) runs each epoch as a single jitted
-        lax.scan over device-resident stacked batches
-        (repro.runtime.epoch_engine); "batch" is the per-batch reference
-        loop (one dispatch + one host->device transfer per batch).  Both
-        paths produce the same learned state modulo reduction order.
+        Equivalent to ``self.compile(ExecutionConfig(engine=engine,
+        trainer=trainer)).fit(...)``, with the learned state copied back onto
+        this Network so the legacy ``states``/``predict``/``evaluate``
+        surface keeps working.  Parity with the explicit compile path is
+        bit-exact (tests/test_compile_api.py).
         """
-        t0 = time.perf_counter()
+        warnings.warn(
+            "Network.fit(engine=..., trainer=...) is deprecated; use "
+            "network.compile(ExecutionConfig(engine=..., trainer=...)).fit(...)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.core.compiled import CompiledNetwork, ExecutionConfig
+
+        config = ExecutionConfig(engine=engine, trainer=trainer)
         self.build()
-        x, y = dataset
-        self._n_total = n = x.shape[0]
-        if n == 0:
-            raise ValueError("fit() called with an empty dataset")
-        if engine not in ("scan", "batch"):
-            raise ValueError(f"Unknown engine {engine!r} (want 'scan' or 'batch')")
-        if readout not in ("bcpnn", "sgd"):
-            raise ValueError(f"Unknown readout {readout!r} (want 'bcpnn' or 'sgd')")
-        # A batch size larger than the dataset would round n down to zero and
-        # silently train on nothing — clamp to the dataset size instead.
-        batch_size = min(batch_size, n)
-        if n % batch_size != 0:
-            # Keep step functions shape-stable under jit: each epoch uses n
-            # samples (a multiple of B).  _epoch_indices permutes the FULL
-            # dataset before truncating, so a different ragged tail is left
-            # out each epoch and no sample is permanently excluded.
-            n = (n // batch_size) * batch_size
-        history: List[dict] = []
-
-        if engine == "scan":
-            from repro.runtime.epoch_engine import EpochEngine
-
-            eng = EpochEngine(self, trainer=trainer)
-            eng.run_hidden_phase(
-                x, n, epochs_hidden, batch_size, shuffle, history, verbose
-            )
-            if readout == "bcpnn":
-                eng.run_bcpnn_readout(
-                    x, y, n, epochs_readout, batch_size, shuffle, history, verbose
-                )
-            else:
-                self._sgd_readout = eng.run_sgd_readout(
-                    x, y, n, epochs_readout, batch_size, shuffle, history,
-                    verbose, lr=readout_lr,
-                )
-        else:
-            # ---- engine == "batch": the per-batch reference loop ----
-            # Phase 1: unsupervised, layer by layer (greedy stacking).
-            for li, layer in enumerate(self.hidden_layers):
-                step = (
-                    trainer.hidden_step(layer)
-                    if trainer is not None
-                    else jax.jit(lambda s, xb, _l=layer: _l.train_batch(s, xb)[0])
-                )
-                below = jax.jit(lambda xb, _n=li: self._hidden_forward(xb, upto=_n))
-                for epoch in range(epochs_hidden):
-                    idx = self._epoch_indices(n, shuffle)
-                    for b in range(0, n, batch_size):
-                        xb = jnp.asarray(x[idx[b : b + batch_size]])
-                        if li > 0:
-                            xb = below(xb)
-                        self.states[li] = step(self.states[li], xb)
-                    if verbose:
-                        print(
-                            f"[fit] hidden layer {li} epoch "
-                            f"{epoch + 1}/{epochs_hidden}"
-                        )
-                    history.append({"phase": f"hidden{li}", "epoch": epoch})
-
-            # Phase 2: supervised readout on frozen hidden representations.
-            if readout == "bcpnn":
-                self._fit_bcpnn_readout(
-                    x, y, n, epochs_readout, batch_size, shuffle, history,
-                    verbose, trainer,
-                )
-            else:
-                self._fit_sgd_readout(
-                    x, y, n, epochs_readout, batch_size, shuffle, history,
-                    verbose, lr=readout_lr,
-                )
-
-        return FitResult(
+        # Share this Network's RNG stream so consecutive legacy fit() calls
+        # consume shuffles exactly as the pre-compile implementation did.
+        compiled = CompiledNetwork(self, config, rng=self._rng)
+        result = compiled.fit(
+            dataset,
             epochs_hidden=epochs_hidden,
             epochs_readout=epochs_readout,
             batch_size=batch_size,
-            wall_time_s=time.perf_counter() - t0,
-            history=history,
+            readout=readout,
+            readout_lr=readout_lr,
+            shuffle=shuffle,
+            verbose=verbose,
         )
-
-    def _epoch_indices(self, n: int, shuffle: bool) -> np.ndarray:
-        """First `n` indices of a full-dataset permutation.
-
-        Permuting all `_n_total` samples before truncating to the
-        shape-stable length `n` rotates which ragged-tail samples sit out
-        each epoch — a fixed arange(n) would permanently exclude the tail.
-        """
-        if not shuffle:
-            return np.arange(n)
-        return self._rng.permutation(getattr(self, "_n_total", n))[:n]
-
-    def _fit_bcpnn_readout(
-        self, x, y, n, epochs, batch_size, shuffle, history, verbose, trainer
-    ):
-        layer = self.readout_layer
-        if layer is None:
-            return
-        li = len(self.layers) - 1
-        step = (
-            trainer.readout_step(layer)
-            if trainer is not None
-            else jax.jit(lambda s, hb, yb, _l=layer: _l.train_batch(s, hb, yb)[0])
-        )
-        below = jax.jit(lambda xb: self._hidden_forward(xb))
-        for epoch in range(epochs):
-            idx = self._epoch_indices(n, shuffle)
-            for b in range(0, n, batch_size):
-                sel = idx[b : b + batch_size]
-                hb = below(jnp.asarray(x[sel]))
-                yb = jnp.asarray(y[sel])
-                self.states[li] = step(self.states[li], hb, yb)
-            if verbose:
-                print(f"[fit] readout epoch {epoch + 1}/{epochs}")
-            history.append({"phase": "readout", "epoch": epoch})
-
-    def _fit_sgd_readout(
-        self, x, y, n, epochs, batch_size, shuffle, history, verbose, lr
-    ):
-        """Hybrid readout: AdamW + cross-entropy on frozen hidden reps — the
-        paper's 97.5%+ MNIST configuration ("using StreamBrain to derive
-        hidden layer representations ... and SGD training only for the output
-        layer")."""
-        n_hidden = self.hidden_layers[-1].spec.n_post
-        params, opt, opt_state, loss_fn = sgd_readout_setup(
-            self.seed, n_hidden, y, lr
-        )
-
-        @jax.jit
-        def step(p, s, hb, yb):
-            loss, g = jax.value_and_grad(loss_fn)(p, hb, yb)
-            updates, s = opt.update(g, s, p)
-            p = jax.tree_util.tree_map(lambda a, u: a + u, p, updates)
-            return p, s, loss
-
-        below = jax.jit(lambda xb: self._hidden_forward(xb))
-        for epoch in range(epochs):
-            idx = self._epoch_indices(n, shuffle)
-            for b in range(0, n, batch_size):
-                sel = idx[b : b + batch_size]
-                hb = below(jnp.asarray(x[sel]))
-                params, opt_state, loss = step(
-                    params, opt_state, hb, jnp.asarray(y[sel])
-                )
-            if verbose:
-                print(f"[fit] sgd readout epoch {epoch + 1}/{epochs} loss={loss:.4f}")
-            history.append({"phase": "sgd_readout", "epoch": epoch})
-        self._sgd_readout = params
+        self.states = list(compiled.state.layers)
+        self._sgd_readout = compiled.state.readout
+        return result
 
     # ------------------------------------------------------------ evaluation
     def evaluate(

@@ -23,7 +23,7 @@ performance optimization") so clarity wins over micro-optimization here.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

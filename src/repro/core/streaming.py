@@ -11,18 +11,56 @@ bursts into micro-batches without changing semantics — the EWMA with batch
 mean over b samples at rate λ is applied once per micro-batch, exactly as
 Alg. 1 does for any B_S.  Inference streaming reuses the same cell without
 the learning step.
+
+The per-shape cell caches are LRU-bounded (``cache_size``): an adversarial
+burst pattern cycling through many distinct micro-batch sizes evicts the
+least-recently-used cell instead of growing the cache without limit.
+Sessions constructed via ``CompiledNetwork.streaming()`` share ONE such
+bounded cache per layer across all of that network's sessions, and write
+their learned state back into the compiled NetworkState on close().
 """
 from __future__ import annotations
 
 import time
-from collections import deque
-from typing import Callable, Deque, Optional, Tuple
+from collections import OrderedDict, deque
+from typing import Callable, Deque, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.layers import LayerState, StructuralPlasticityLayer
+
+
+class _LRUCells:
+    """A tiny LRU map: micro-batch size -> jitted cell."""
+
+    def __init__(self, capacity: int):
+        self.capacity = max(1, int(capacity))
+        self._d: "OrderedDict[int, Callable]" = OrderedDict()
+        self.evictions = 0
+
+    def set_capacity(self, capacity: int) -> None:
+        self.capacity = max(1, int(capacity))
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def get(self, key: int) -> Optional[Callable]:
+        cell = self._d.get(key)
+        if cell is not None:
+            self._d.move_to_end(key)
+        return cell
+
+    def put(self, key: int, cell: Callable) -> None:
+        self._d[key] = cell
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
 
 
 class StreamingSession:
@@ -34,6 +72,12 @@ class StreamingSession:
         state: LayerState,
         max_batch: int = 16,
         max_wait_s: float = 0.0,
+        cache_size: int = 8,
+        train_cell_factory: Optional[Callable] = None,
+        infer_cell_factory: Optional[Callable] = None,
+        train_cells: Optional[_LRUCells] = None,
+        infer_cells: Optional[_LRUCells] = None,
+        on_close: Optional[Callable] = None,
     ):
         self.layer = layer
         self.state = state
@@ -41,9 +85,25 @@ class StreamingSession:
         self.max_wait_s = max_wait_s
         self._buf: Deque[np.ndarray] = deque()
         self._last_flush = time.perf_counter()
-        # One jitted cell per micro-batch size actually seen (shape cache).
-        self._train_cells = {}
-        self._infer_cells = {}
+        # LRU of jitted cells per micro-batch size actually seen.  A caller
+        # (CompiledNetwork.streaming) may pass shared LRUs so several
+        # sessions use ONE bounded cache — there is never a second,
+        # session-private copy keeping evicted traces alive.  When LRUs are
+        # injected, their capacity governs and ``cache_size`` is ignored
+        # (the injector sizes them; see stats for the actual bounds).
+        self._train_cells = train_cells if train_cells is not None else _LRUCells(cache_size)
+        self._infer_cells = infer_cells if infer_cells is not None else _LRUCells(cache_size)
+        # Close over the LAYER only, never the session: cells may outlive
+        # this session inside a CompiledNetwork's shared LRU, and a
+        # session-capturing closure would pin its state copy and buffers.
+        self._train_cell_factory = train_cell_factory or (
+            lambda b, _l=layer: jax.jit(lambda s, x: _l.train_batch(s, x)[0])
+        )
+        self._infer_cell_factory = infer_cell_factory or (
+            lambda b, _l=layer: jax.jit(_l.forward)
+        )
+        self._on_close = on_close
+        self._closed = False
         self.samples_seen = 0
         self.flushes = 0
 
@@ -51,6 +111,11 @@ class StreamingSession:
     def feed(self, sample: np.ndarray) -> None:
         """Queue one sample (n_features,); flush when the buffer fills or the
         wait budget expires."""
+        if self._closed:
+            raise RuntimeError(
+                "StreamingSession is closed; its state was already published "
+                "— open a new session to keep training"
+            )
         self._buf.append(np.asarray(sample))
         now = time.perf_counter()
         if (
@@ -61,6 +126,8 @@ class StreamingSession:
 
     def flush(self) -> None:
         """Apply one EWMA update over the buffered micro-batch."""
+        if self._closed:
+            raise RuntimeError("StreamingSession is closed")
         if not self._buf:
             return
         xb = jnp.asarray(np.stack(list(self._buf), axis=0))
@@ -68,8 +135,8 @@ class StreamingSession:
         b = xb.shape[0]
         cell = self._train_cells.get(b)
         if cell is None:
-            cell = jax.jit(lambda s, x: self.layer.train_batch(s, x)[0])
-            self._train_cells[b] = cell
+            cell = self._train_cell_factory(b)
+            self._train_cells.put(b, cell)
         self.state = cell(self.state, xb)
         self.samples_seen += b
         self.flushes += 1
@@ -81,10 +148,33 @@ class StreamingSession:
         xb = jnp.asarray(sample)[None, :]
         cell = self._infer_cells.get(1)
         if cell is None:
-            cell = jax.jit(self.layer.forward)
-            self._infer_cells[1] = cell
+            cell = self._infer_cell_factory(1)
+            self._infer_cells.put(1, cell)
         return np.asarray(cell(self.state, xb)[0])
 
+    # ------------------------------------------------------------- plumbing
+    @property
+    def stats(self) -> dict:
+        """Session statistics, including the bounded jit-cache occupancy."""
+        return {
+            "samples_seen": self.samples_seen,
+            "flushes": self.flushes,
+            "buffered": len(self._buf),
+            "train_cache_size": len(self._train_cells),
+            "infer_cache_size": len(self._infer_cells),
+            "cache_capacity": self._train_cells.capacity,
+            "infer_cache_capacity": self._infer_cells.capacity,
+            "cache_evictions": self._train_cells.evictions
+            + self._infer_cells.evictions,
+        }
+
     def close(self) -> LayerState:
+        """Flush and hand the learned state to on_close (idempotent: a
+        second close returns the state without re-publishing)."""
+        if self._closed:
+            return self.state
         self.flush()
+        if self._on_close is not None:
+            self._on_close(self.state)
+        self._closed = True
         return self.state

@@ -15,7 +15,6 @@ import dataclasses
 from typing import Dict, Iterator, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

@@ -19,7 +19,6 @@ Generators:
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import numpy as np
 

@@ -13,7 +13,7 @@ routes here when ``use_kernels=True``).  Responsibilities:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

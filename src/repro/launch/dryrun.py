@@ -40,7 +40,7 @@ from repro.configs.registry import ARCH_NAMES
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.optim import AdamW
-from repro.sharding.rules import ShardCtx, param_shardings, param_specs
+from repro.sharding.rules import ShardCtx
 
 COLLECTIVE_OPS = (
     "all-gather",

@@ -29,6 +29,7 @@ def run(multi_pod: bool, out_dir: str, n_f=55296, n_hcu=512, n_mcu=256,
     from repro.core.distributed import DataParallelTrainer
     from repro.launch.dryrun import collective_bytes
     from repro.launch.mesh import make_production_mesh
+    from repro.runtime.plans import BatchPlan
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     pre = UnitLayout(n_f // 2, 2)
@@ -41,8 +42,11 @@ def run(multi_pod: bool, out_dir: str, n_f=55296, n_hcu=512, n_mcu=256,
         pre, post, fan_in=fan_in or pre.n_hcu, lam=lam, init_jitter=1.0,
         gain=4.0,
     )
+    # The trainer decorates an ExecutionPlan (the compile-step route); the
+    # plan's per-batch hidden step is the lowering/analysis surface.
     tr = DataParallelTrainer(mesh, mode="shard_map")
-    step = tr.hidden_step(layer)
+    plan = tr.decorate(BatchPlan([layer]))
+    step = plan.hidden_step(0)
 
     state_sds = jax.eval_shape(lambda: layer.init(jax.random.PRNGKey(0)))
     x_sds = jax.ShapeDtypeStruct((batch, n_f), jnp.float32)

@@ -13,7 +13,7 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.configs import ARCH_NAMES, get_smoke_config
 from repro.models import build_model
 from repro.runtime import Request, ServeSession
 

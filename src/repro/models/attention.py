@@ -14,7 +14,7 @@ cache (512+64 dims/token instead of H*(128+128) = 32k dims/token — the
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,15 +10,13 @@ branching, so one compiled body serves all layers.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
-from repro.models import ssm as ssm_mod
 from repro.models.common import (
     Params,
     mlp_apply,
@@ -28,7 +26,7 @@ from repro.models.common import (
     norm_init,
     norm_logical,
 )
-from repro.sharding.rules import L, ShardCtx
+from repro.sharding.rules import ShardCtx
 
 
 # ----------------------------------------------------------- one tf block

@@ -18,8 +18,7 @@ heterogeneity (gemma3 5:1 local:global) rides in scanned scalar arrays.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

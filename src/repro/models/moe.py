@@ -24,9 +24,8 @@ All schemes share ``_dispatch_compute`` so they are numerically identical
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

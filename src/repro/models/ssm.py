@@ -17,7 +17,7 @@ local to their head shard so no collectives appear inside the scan.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

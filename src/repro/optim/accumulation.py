@@ -4,7 +4,7 @@ for the train_4k cells: loss over global_batch=256 is accumulated over
 activation working set scales with the microbatch, not the global batch."""
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,20 +1,22 @@
-# Runtime: device-resident epoch engine (scan-based Network.fit),
-# fault-tolerant training loop (checkpoint/restart, stragglers, elastic
-# restore) + batched serving loop (continuous slot reuse).
+# Runtime: ExecutionPlan strategies (scan epoch engine + per-batch reference
+# loop) behind the compile-step API, fault-tolerant training loop
+# (checkpoint/restart, stragglers, elastic restore) + batched serving loop
+# (continuous slot reuse).
 from repro.runtime.epoch_engine import (
-    EpochEngine,
     epoch_sharding,
     hidden_epoch_fn,
     readout_epoch_fn,
     sgd_epoch_fn,
     stack_epoch,
 )
+from repro.runtime.plans import BatchPlan, ExecutionPlan, ScanPlan, make_plan
 from repro.runtime.train_loop import TrainLoopConfig, TrainLoopResult, train_loop
 from repro.runtime.serve_loop import Completion, Request, ServeSession
 
 __all__ = [
-    "EpochEngine", "epoch_sharding", "hidden_epoch_fn", "readout_epoch_fn",
+    "epoch_sharding", "hidden_epoch_fn", "readout_epoch_fn",
     "sgd_epoch_fn", "stack_epoch",
+    "BatchPlan", "ExecutionPlan", "ScanPlan", "make_plan",
     "TrainLoopConfig", "TrainLoopResult", "train_loop",
     "Completion", "Request", "ServeSession",
 ]

@@ -25,6 +25,11 @@ Distributed training threads through unchanged: a
 :class:`repro.core.distributed.DataParallelTrainer` step (shard_map or pjit)
 is itself a traceable function, so it becomes the scan body and the stacked
 epoch is placed with the batch axes sharded (leading scan axis replicated).
+
+The epoch *driver* (shuffle, stack, thread states through phases) lives in
+:class:`repro.runtime.plans.ScanPlan`, consumed by
+``repro.core.compiled.CompiledNetwork``; this module only builds the jitted
+epoch functions.
 """
 from __future__ import annotations
 
@@ -79,15 +84,18 @@ def epoch_sharding(trainer, ndim: int) -> Optional[NamedSharding]:
 # mutable carry and the epoch buffers donated — re-running an epoch reuses
 # the same compiled program.
 # --------------------------------------------------------------------------
-def _donate(*argnums: int) -> dict:
+def _donate(enabled: bool, *argnums: int) -> dict:
     """donate_argnums kwargs, suppressed on CPU (donation unsupported there
-    and jax warns per-call)."""
-    if jax.default_backend() == "cpu":
+    and jax warns per-call) or when the ExecutionConfig opts out."""
+    if not enabled or jax.default_backend() == "cpu":
         return {}
     return {"donate_argnums": argnums}
 
 
-def _forward_stack(layers: Sequence[Any]) -> Callable:
+def forward_stack(layers: Sequence[Any]) -> Callable:
+    """``(states, xb) -> xb`` through a frozen layer stack — the ONE
+    frozen-forward loop, shared by the scan bodies here and by
+    BatchPlan's per-batch reference loop."""
     def fwd(states, xb):
         for layer, state in zip(layers, states):
             xb = layer.forward(state, xb)
@@ -100,6 +108,7 @@ def hidden_epoch_fn(
     layer,
     below_layers: Sequence[Any],
     step_fn: Optional[Callable] = None,
+    donate: bool = True,
 ) -> Callable:
     """Jitted ``(state, below_states, xs) -> state`` for one Hebbian epoch.
 
@@ -108,7 +117,7 @@ def hidden_epoch_fn(
     constants, so the compiled epoch is reusable).  ``step_fn`` overrides the
     per-batch transition — e.g. a DataParallelTrainer.hidden_step.
     """
-    below = _forward_stack(below_layers)
+    below = forward_stack(below_layers)
     step = step_fn if step_fn is not None else (
         lambda s, xb: layer.train_batch(s, xb)[0]
     )
@@ -120,17 +129,18 @@ def hidden_epoch_fn(
         state, _ = jax.lax.scan(body, state, xs)
         return state
 
-    return jax.jit(epoch, **_donate(0, 2))
+    return jax.jit(epoch, **_donate(donate, 0, 2))
 
 
 def readout_epoch_fn(
     layer,
     hidden_layers: Sequence[Any],
     step_fn: Optional[Callable] = None,
+    donate: bool = True,
 ) -> Callable:
     """Jitted ``(state, hidden_states, xs, ys) -> state`` for one supervised
     BCPNN-readout epoch (post-activations clamped to one-hot labels)."""
-    below = _forward_stack(hidden_layers)
+    below = forward_stack(hidden_layers)
     step = step_fn if step_fn is not None else (
         lambda s, hb, yb: layer.train_batch(s, hb, yb)[0]
     )
@@ -143,13 +153,15 @@ def readout_epoch_fn(
         state, _ = jax.lax.scan(body, state, (xs, ys))
         return state
 
-    return jax.jit(epoch, **_donate(0, 2, 3))
+    return jax.jit(epoch, **_donate(donate, 0, 2, 3))
 
 
-def sgd_epoch_fn(opt, hidden_layers: Sequence[Any], loss_fn: Callable) -> Callable:
+def sgd_epoch_fn(
+    opt, hidden_layers: Sequence[Any], loss_fn: Callable, donate: bool = True
+) -> Callable:
     """Jitted ``(params, opt_state, hidden_states, xs, ys) ->
     (params, opt_state, losses)`` for one hybrid-readout (AdamW) epoch."""
-    below = _forward_stack(hidden_layers)
+    below = forward_stack(hidden_layers)
 
     def epoch(params, opt_state, hidden_states, xs, ys):
         def body(carry, batch):
@@ -166,100 +178,4 @@ def sgd_epoch_fn(opt, hidden_layers: Sequence[Any], loss_fn: Callable) -> Callab
         )
         return params, opt_state, losses
 
-    return jax.jit(epoch, **_donate(0, 1, 3, 4))
-
-
-class EpochEngine:
-    """Drives Network.fit's three phases through epoch-long scans.
-
-    Owns the per-layer compiled epoch functions (built once, reused across
-    epochs) and the host-side shuffle/stack.  The network's layer *structure*
-    is closed over; all learnable state stays in the functional pytrees the
-    caller threads through.
-    """
-
-    def __init__(self, network, trainer=None):
-        self.net = network
-        self.trainer = trainer
-
-    # ------------------------------------------------------------- plumbing
-    def _stack(self, arr, idx, batch_size):
-        return stack_epoch(
-            arr, idx, batch_size, epoch_sharding(self.trainer, arr.ndim + 1)
-        )
-
-    # --------------------------------------------------------------- phases
-    def run_hidden_phase(
-        self, x, n, epochs, batch_size, shuffle, history, verbose
-    ) -> None:
-        net = self.net
-        for li, layer in enumerate(net.hidden_layers):
-            step = (
-                self.trainer.hidden_step(layer) if self.trainer is not None else None
-            )
-            epoch_fn = hidden_epoch_fn(layer, net.layers[:li], step_fn=step)
-            state = net.states[li]
-            if self.trainer is not None:
-                state = self.trainer.place_state(layer, state)
-            below_states = net.states[:li]
-            for epoch in range(epochs):
-                idx = net._epoch_indices(n, shuffle)
-                xs = self._stack(x, idx, batch_size)
-                state = epoch_fn(state, below_states, xs)
-                if verbose:
-                    print(f"[fit/scan] hidden layer {li} epoch {epoch + 1}/{epochs}")
-                history.append({"phase": f"hidden{li}", "epoch": epoch})
-            net.states[li] = state
-
-    def run_bcpnn_readout(
-        self, x, y, n, epochs, batch_size, shuffle, history, verbose
-    ) -> None:
-        net = self.net
-        layer = net.readout_layer
-        if layer is None:
-            return
-        li = len(net.layers) - 1
-        step = (
-            self.trainer.readout_step(layer) if self.trainer is not None else None
-        )
-        epoch_fn = readout_epoch_fn(layer, net.layers[:li], step_fn=step)
-        state = net.states[li]
-        if self.trainer is not None:
-            state = self.trainer.place_state(layer, state)
-        hidden_states = net.states[:li]
-        for epoch in range(epochs):
-            idx = net._epoch_indices(n, shuffle)
-            xs = self._stack(x, idx, batch_size)
-            ys = self._stack(y, idx, batch_size)
-            state = epoch_fn(state, hidden_states, xs, ys)
-            if verbose:
-                print(f"[fit/scan] readout epoch {epoch + 1}/{epochs}")
-            history.append({"phase": "readout", "epoch": epoch})
-        net.states[li] = state
-
-    def run_sgd_readout(
-        self, x, y, n, epochs, batch_size, shuffle, history, verbose, lr
-    ) -> dict:
-        from repro.core.network import sgd_readout_setup
-
-        net = self.net
-        n_hidden = net.hidden_layers[-1].spec.n_post
-        params, opt, opt_state, loss_fn = sgd_readout_setup(
-            net.seed, n_hidden, y, lr
-        )
-        epoch_fn = sgd_epoch_fn(opt, net.hidden_layers, loss_fn)
-        hidden_states = net.states[: len(net.hidden_layers)]
-        for epoch in range(epochs):
-            idx = net._epoch_indices(n, shuffle)
-            xs = self._stack(x, idx, batch_size)
-            ys = self._stack(y, idx, batch_size)
-            params, opt_state, losses = epoch_fn(
-                params, opt_state, hidden_states, xs, ys
-            )
-            if verbose:
-                print(
-                    f"[fit/scan] sgd readout epoch {epoch + 1}/{epochs} "
-                    f"loss={float(losses[-1]):.4f}"
-                )
-            history.append({"phase": "sgd_readout", "epoch": epoch})
-        return params
+    return jax.jit(epoch, **_donate(donate, 0, 1, 3, 4))

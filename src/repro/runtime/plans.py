@@ -1,0 +1,264 @@
+"""ExecutionPlan strategies: how a compiled network's epochs execute.
+
+``Network.compile(ExecutionConfig(...))`` binds a declarative layer stack to
+exactly one ExecutionPlan; every training phase (hidden Hebbian, BCPNN
+readout, SGD readout) and every single-batch step then routes through that
+plan.  Two strategies exist:
+
+* :class:`ScanPlan` ("scan", the default) — each epoch is one jitted,
+  buffer-donated ``lax.scan`` over a device-resident ``(n_batches, B, F)``
+  stack (:mod:`repro.runtime.epoch_engine`), the paper's resident-state
+  streaming posture.
+* :class:`BatchPlan` ("batch") — the per-batch reference loop: one jitted
+  dispatch and one host->device transfer per batch.  Kept as the numerical
+  reference; parity is asserted in tests.
+
+A :class:`repro.core.distributed.DataParallelTrainer` is a plan *decorator*:
+``trainer.decorate(plan)`` swaps the per-batch transition for the sharded
+shard_map/pjit step (the paper's MPI backend) without changing the driver.
+Both plans cache their jitted epoch/step callables, so repeated ``fit`` /
+``partial_fit`` calls on one CompiledNetwork never rebuild or re-trace.
+
+Epoch-runner calling convention (host-side data in, new state out):
+
+    hidden_epoch(li)(state, below_states, x, idx, batch_size) -> state
+    readout_epoch()(state, hidden_states, x, y, idx, batch_size) -> state
+    sgd_epoch(opt, loss_fn)(params, opt_state, hidden_states, x, y, idx,
+                            batch_size) -> (params, opt_state, last_loss)
+
+``x``/``y`` are the full host arrays; ``idx`` is the (already length-trimmed)
+shuffled index vector for this epoch.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.epoch_engine import (
+    epoch_sharding,
+    forward_stack,
+    hidden_epoch_fn,
+    readout_epoch_fn,
+    sgd_epoch_fn,
+    stack_epoch,
+)
+
+
+class ExecutionPlan:
+    """Base strategy: owns the bound layers, the optional trainer decoration,
+    and the cache of compiled callables."""
+
+    name: str = "?"
+
+    def __init__(self, layers: Sequence[Any], donate: bool = True):
+        from repro.core.layers import DenseLayer, StructuralPlasticityLayer
+
+        self.layers: List[Any] = list(layers)
+        self.donate = donate
+        self.trainer = None
+        self._hidden_cache: dict = {}
+        self._hidden_step_cache: dict = {}
+        self._readout_cache: Optional[Callable] = None
+        self._plastic_cls = StructuralPlasticityLayer
+        self._dense_cls = DenseLayer
+
+    # ------------------------------------------------------------ structure
+    @property
+    def hidden_layers(self) -> List[Any]:
+        return [l for l in self.layers if isinstance(l, self._plastic_cls)]
+
+    @property
+    def readout_layer(self) -> Optional[Any]:
+        last = self.layers[-1] if self.layers else None
+        return last if isinstance(last, self._dense_cls) else None
+
+    # ----------------------------------------------------------- decoration
+    def bind_trainer(self, trainer) -> "ExecutionPlan":
+        """Called by DataParallelTrainer.decorate; must precede compilation
+        of any cached callable (they close over the trainer's steps)."""
+        if self._hidden_cache or self._hidden_step_cache or self._readout_cache:
+            raise RuntimeError(
+                "cannot bind a trainer to a plan that already compiled steps"
+            )
+        self.trainer = trainer
+        return self
+
+    def place_state(self, layer, state):
+        """Device placement for a layer state entering this plan's epochs."""
+        return state
+
+    # ------------------------------------------------------- single steps
+    def hidden_step(self, li: int) -> Callable:
+        """Jitted per-batch ``(state, xb) -> state`` for hidden layer li —
+        the lowering/analysis surface (see launch/dryrun_bcpnn.py) and
+        BatchPlan's per-batch transition."""
+        fn = self._hidden_step_cache.get(li)
+        if fn is None:
+            layer = self.hidden_layers[li]
+            if self.trainer is not None:
+                fn = self.trainer.hidden_step(layer)
+            else:
+                fn = jax.jit(lambda s, xb, _l=layer: _l.train_batch(s, xb)[0])
+            self._hidden_step_cache[li] = fn
+        return fn
+
+    # ----------------------------------------------------------- interface
+    def hidden_epoch(self, li: int) -> Callable:
+        raise NotImplementedError
+
+    def readout_epoch(self) -> Callable:
+        raise NotImplementedError
+
+    def sgd_epoch(self, opt, loss_fn: Callable) -> Callable:
+        raise NotImplementedError
+
+
+class ScanPlan(ExecutionPlan):
+    """Device-resident epochs: stack once, scan once (engine="scan")."""
+
+    name = "scan"
+
+    def _stack(self, arr, idx, batch_size):
+        return stack_epoch(
+            arr, idx, batch_size, epoch_sharding(self.trainer, arr.ndim + 1)
+        )
+
+    def place_state(self, layer, state):
+        if self.trainer is not None:
+            return self.trainer.place_state(layer, state)
+        return state
+
+    def hidden_epoch(self, li: int) -> Callable:
+        run = self._hidden_cache.get(li)
+        if run is None:
+            layer = self.hidden_layers[li]
+            step = self.trainer.hidden_step(layer) if self.trainer else None
+            epoch_fn = hidden_epoch_fn(
+                layer, self.layers[:li], step_fn=step, donate=self.donate
+            )
+
+            def run(state, below_states, x, idx, batch_size):
+                xs = self._stack(x, idx, batch_size)
+                return epoch_fn(state, below_states, xs)
+
+            self._hidden_cache[li] = run
+        return run
+
+    def readout_epoch(self) -> Callable:
+        if self._readout_cache is None:
+            layer = self.readout_layer
+            li = len(self.layers) - 1
+            step = self.trainer.readout_step(layer) if self.trainer else None
+            epoch_fn = readout_epoch_fn(
+                layer, self.layers[:li], step_fn=step, donate=self.donate
+            )
+
+            def run(state, hidden_states, x, y, idx, batch_size):
+                xs = self._stack(x, idx, batch_size)
+                ys = self._stack(y, idx, batch_size)
+                return epoch_fn(state, hidden_states, xs, ys)
+
+            self._readout_cache = run
+        return self._readout_cache
+
+    def sgd_epoch(self, opt, loss_fn: Callable) -> Callable:
+        epoch_fn = sgd_epoch_fn(
+            opt, self.hidden_layers, loss_fn, donate=self.donate
+        )
+
+        def run(params, opt_state, hidden_states, x, y, idx, batch_size):
+            xs = self._stack(x, idx, batch_size)
+            ys = self._stack(y, idx, batch_size)
+            params, opt_state, losses = epoch_fn(
+                params, opt_state, hidden_states, xs, ys
+            )
+            return params, opt_state, losses[-1]
+
+        return run
+
+
+class BatchPlan(ExecutionPlan):
+    """Per-batch reference loop (engine="batch"): numerically interchangeable
+    with ScanPlan modulo reduction order; each batch pays a dispatch and a
+    host->device transfer."""
+
+    name = "batch"
+
+    def _below_fn(self, upto: int) -> Callable:
+        return jax.jit(forward_stack(self.layers[:upto]))
+
+    def hidden_epoch(self, li: int) -> Callable:
+        run = self._hidden_cache.get(li)
+        if run is None:
+            step = self.hidden_step(li)
+            below = self._below_fn(li)
+
+            def run(state, below_states, x, idx, batch_size):
+                for b in range(0, idx.shape[0], batch_size):
+                    xb = jnp.asarray(x[idx[b : b + batch_size]])
+                    if below_states:
+                        xb = below(below_states, xb)
+                    state = step(state, xb)
+                return state
+
+            self._hidden_cache[li] = run
+        return run
+
+    def readout_epoch(self) -> Callable:
+        if self._readout_cache is None:
+            layer = self.readout_layer
+            li = len(self.layers) - 1
+            if self.trainer is not None:
+                step = self.trainer.readout_step(layer)
+            else:
+                step = jax.jit(
+                    lambda s, hb, yb, _l=layer: _l.train_batch(s, hb, yb)[0]
+                )
+            below = self._below_fn(li)
+
+            def run(state, hidden_states, x, y, idx, batch_size):
+                for b in range(0, idx.shape[0], batch_size):
+                    sel = idx[b : b + batch_size]
+                    hb = below(hidden_states, jnp.asarray(x[sel]))
+                    state = step(state, hb, jnp.asarray(y[sel]))
+                return state
+
+            self._readout_cache = run
+        return self._readout_cache
+
+    def sgd_epoch(self, opt, loss_fn: Callable) -> Callable:
+        below = self._below_fn(len(self.hidden_layers))
+
+        @jax.jit
+        def step(p, s, hb, yb):
+            loss, g = jax.value_and_grad(loss_fn)(p, hb, yb)
+            updates, s = opt.update(g, s, p)
+            p = jax.tree_util.tree_map(lambda a, u: a + u, p, updates)
+            return p, s, loss
+
+        def run(params, opt_state, hidden_states, x, y, idx, batch_size):
+            loss = jnp.zeros(())
+            for b in range(0, idx.shape[0], batch_size):
+                sel = idx[b : b + batch_size]
+                hb = below(hidden_states, jnp.asarray(x[sel]))
+                params, opt_state, loss = step(
+                    params, opt_state, hb, jnp.asarray(y[sel])
+                )
+            return params, opt_state, loss
+
+        return run
+
+
+PLANS = {ScanPlan.name: ScanPlan, BatchPlan.name: BatchPlan}
+
+
+def make_plan(engine: str, layers: Sequence[Any], donate: bool = True) -> ExecutionPlan:
+    try:
+        cls = PLANS[engine]
+    except KeyError:
+        raise ValueError(
+            f"Unknown engine {engine!r} (want one of {sorted(PLANS)})"
+        ) from None
+    return cls(layers, donate=donate)

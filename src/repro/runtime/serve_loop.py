@@ -17,7 +17,7 @@ axis, so admission never recompiles: the decode step is batch-shape-stable.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

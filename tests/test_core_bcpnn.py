@@ -5,8 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    EPS,
-    MarginalState,
     UnitLayout,
     batch_means,
     complementary_layout,

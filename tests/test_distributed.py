@@ -5,7 +5,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -177,12 +176,14 @@ def test_elastic_checkpoint_restore_across_meshes():
 
 
 def test_scan_engine_data_parallel_matches_single_device():
-    """The epoch engine threads DataParallelTrainer steps through its scan
-    bodies: a sharded scan epoch must match the single-device scan epoch."""
+    """The trainer decorates the compiled execution plan: a sharded scan
+    epoch must match the single-device scan epoch, for one declarative model
+    compiled under three ExecutionConfigs."""
     run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core import (DenseLayer, Network, StructuralPlasticityLayer,
-                                UnitLayout, onehot_layout)
+        from repro.core import (DenseLayer, ExecutionConfig, Network,
+                                StructuralPlasticityLayer, UnitLayout,
+                                onehot_layout)
         from repro.core.distributed import DataParallelTrainer
         from repro.data import complementary_code, mnist_like
 
@@ -197,17 +198,16 @@ def test_scan_engine_data_parallel_matches_single_device():
             net.add(DenseLayer(hidden, onehot_layout(10), lam=0.05))
             return net
 
-        kw = dict(epochs_hidden=2, epochs_readout=2, batch_size=64,
-                  engine="scan")
-        ref = build()
+        kw = dict(epochs_hidden=2, epochs_readout=2, batch_size=64)
+        ref = build().compile(ExecutionConfig(engine="scan"))
         ref.fit((x, ds.y_train), **kw)
 
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         for mode in ("shard_map", "pjit"):
-            net = build()
             tr = DataParallelTrainer(mesh, mode=mode)
-            net.fit((x, ds.y_train), trainer=tr, **kw)
-            for sr, st in zip(ref.states, net.states):
+            compiled = build().compile(ExecutionConfig(engine="scan", trainer=tr))
+            compiled.fit((x, ds.y_train), **kw)
+            for sr, st in zip(ref.state.layers, compiled.state.layers):
                 np.testing.assert_allclose(
                     np.asarray(jax.device_get(st.w)), np.asarray(sr.w),
                     rtol=2e-4, atol=2e-5,

@@ -1,6 +1,5 @@
 """Scan-based epoch engine: parity with the per-batch reference loop,
 batch-size clamping, epoch stacking."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -133,15 +132,17 @@ class TestFitEdgeCases:
     def test_ragged_tail_rotates_across_epochs(self, dataset):
         """Regression: the ragged-tail trim used to permute only arange(n),
         permanently excluding samples past the last full batch."""
+        from repro.core import ExecutionConfig
+
         ds, x, layout = dataset
-        net = _build(layout)
-        net.fit(
+        compiled = _build(layout).compile(ExecutionConfig())
+        compiled.fit(
             (x[:100], ds.y_train[:100]), epochs_hidden=1, epochs_readout=0,
             batch_size=64,
         )
         seen = set()
         for _ in range(10):
-            seen.update(net._epoch_indices(64, shuffle=True).tolist())
+            seen.update(compiled._epoch_indices(64, 100, shuffle=True).tolist())
         assert max(seen) > 63  # tail samples (64..99) get drawn
 
     def test_unknown_engine_rejected(self, dataset):

@@ -1,5 +1,4 @@
 """Model zoo: per-arch smoke + prefill/decode consistency + SSD/MoE units."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

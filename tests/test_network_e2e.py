@@ -7,6 +7,7 @@ import pytest
 
 from repro.core import (
     DenseLayer,
+    ExecutionConfig,
     Network,
     StructuralPlasticityLayer,
     UnitLayout,
@@ -31,21 +32,23 @@ def dataset():
 
 
 def _fit(dataset, readout="bcpnn", precision=None, gain=4.0, epochs=6):
+    """Declare once, bind precision at compile time (the paper's deployment
+    choice), train, evaluate."""
     ds, x_tr, x_te, layout = dataset
     hidden = UnitLayout(16, 16)
     net = Network(seed=0)
     net.add(
         StructuralPlasticityLayer(
             layout, hidden, fan_in=32, lam=0.02, init_jitter=1.0, gain=gain,
-            precision=precision,
         )
     )
-    net.add(DenseLayer(hidden, onehot_layout(10), lam=0.02, precision=precision))
-    net.fit(
+    net.add(DenseLayer(hidden, onehot_layout(10), lam=0.02))
+    compiled = net.compile(ExecutionConfig(precision=precision))
+    compiled.fit(
         (x_tr, ds.y_train), epochs_hidden=epochs, epochs_readout=epochs,
         batch_size=128, readout=readout,
     )
-    return net.evaluate((x_te, ds.y_test))
+    return compiled.evaluate((x_te, ds.y_test))
 
 
 class TestAccuracy:

@@ -1,7 +1,5 @@
 """Optimizer math, checkpoint roundtrip/retention, fault-tolerant loop,
 serving session."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,13 +1,12 @@
 """Sharding rule engine, dry-run plumbing (collective parser, probe grids,
 roofline fitting), precision formats."""
-import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.sharding.rules import DEFAULT_RULES, L, ShardCtx
+from repro.sharding.rules import L, ShardCtx
 
 
 class TestShardCtx:
@@ -137,7 +136,7 @@ class TestProbeGrids:
 
 class TestPrecisionFormats:
     def test_registry(self):
-        from repro.precision import FORMATS, get_format
+        from repro.precision import get_format
 
         assert get_format("bf16").mantissa_bits == 7
         assert get_format("bf14").mantissa_bits == 5
