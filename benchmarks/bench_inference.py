@@ -1,37 +1,102 @@
 """Paper Fig. 2b: inference throughput vs batch size, including the
-single-image "streaming" row (28k-87k img/s on the paper's hardware)."""
+single-image "streaming" row (28k-87k img/s on the paper's hardware) — all
+through the unified serving API — plus the LM-zoo decode comparison: fused
+slot-batched DecodePlan vs the legacy per-slot ServeSession loop
+(EXPERIMENTS.md §Perf records both)."""
 from __future__ import annotations
 
+import time
+import warnings
+
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.bench_common import build_bcpnn, emit, time_fn
 from repro.data import complementary_code, mnist_like
+from repro.runtime import Request, ServiceConfig, serve_model
+
+
+def bench_bcpnn():
+    """Fig. 2b batched + streaming rows via compiled.serve()."""
+    from repro.core import ExecutionConfig
+
+    ds = mnist_like(n_train=2048, n_test=2048, n_features=256, seed=0)
+    x, layout = complementary_code(ds.x_test)
+    compiled = build_bcpnn(layout).compile(ExecutionConfig())
+
+    # Batched classification through the service (shared jitted forward).
+    # Buckets match the sweep so every row measures its exact batch size.
+    svc = compiled.serve(
+        ServiceConfig(plan="batched", buckets=(1, 16, 64, 256, 1024))
+    )
+    for bs in (1, 16, 64, 256, 1024):
+        xb = x[:bs]
+        t = time_fn(svc.predict, xb, iters=5)
+        emit(f"fig2b_infer_bs{bs}", bs / t, "images/s", f"step_s={t:.4g}")
+
+    # Streaming mode: per-sample latency through the coalescing plan.
+    svc = compiled.serve(ServiceConfig(plan="streaming", max_batch=1))
+    svc.infer(x[0])  # warm the cell
+    t0 = time.perf_counter()
+    n = 200
+    for i in range(n):
+        svc.infer(x[i % 1024])
+    dt = time.perf_counter() - t0
+    emit("fig2b_streaming_single", n / dt, "images/s", "latency-path")
+    svc.close()
+
+
+def bench_lm_decode(arch="gemma3-1b", n_requests=8, max_new=16, max_batch=4,
+                    max_seq=64):
+    """Fused slot-batched decode vs the legacy per-slot loop, same traffic."""
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.runtime.serve_loop import ServeSession
+
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(4, 17))
+                                    ).astype(np.int32),
+                max_new_tokens=max_new)
+        for i in range(n_requests)
+    ]
+
+    def run(generate):
+        generate(reqs)  # warm all traces
+        t0 = time.perf_counter()
+        done = generate(reqs)
+        dt = time.perf_counter() - t0
+        return sum(len(c.tokens) for c in done) / dt
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = ServeSession(model, params, max_batch=max_batch,
+                              max_seq=max_seq)
+    tps_legacy = run(legacy.generate)
+    emit(f"decode_perslot_{arch}_b{max_batch}", tps_legacy, "tok/s",
+         "legacy ServeSession: one jit call per slot per step")
+
+    # Production config: one prompt bucket covers the 4..16 token prompts,
+    # so prefill compiles ONE cell (the legacy loop traces every distinct
+    # length).  Without buckets, >cache_size distinct lengths would thrash
+    # the prefill-cell LRU with re-traces — see ServiceConfig.buckets.
+    svc = serve_model(model, params,
+                      ServiceConfig(max_batch=max_batch, max_seq=max_seq,
+                                    buckets=(16,)))
+    tps_fused = run(svc.generate)
+    occ = svc.stats["mean_occupancy"]
+    emit(f"decode_fused_{arch}_b{max_batch}", tps_fused, "tok/s",
+         f"DecodePlan fused step; occupancy={occ:.2f}; "
+         f"speedup={tps_fused / tps_legacy:.2f}x")
 
 
 def main():
-    ds = mnist_like(n_train=2048, n_test=2048, n_features=256, seed=0)
-    x, layout = complementary_code(ds.x_test)
-    net = build_bcpnn(layout).build()
-    layer, state = net.layers[0], net.states[0]
-    fwd = jax.jit(layer.forward)
-    for bs in (1, 16, 64, 256, 1024):
-        xb = jnp.asarray(x[:bs])
-        t = time_fn(fwd, state, xb, iters=5)
-        emit(f"fig2b_infer_bs{bs}", bs / t, "images/s", f"step_s={t:.4g}")
-
-    # streaming mode: per-sample latency through the coalescing session
-    from repro.core.streaming import StreamingSession
-    import time as _t
-
-    sess = StreamingSession(layer, state, max_batch=1)
-    sess.infer(x[0])  # warm the cell
-    t0 = _t.perf_counter()
-    n = 200
-    for i in range(n):
-        sess.infer(x[i % 1024])
-    dt = _t.perf_counter() - t0
-    emit("fig2b_streaming_single", n / dt, "images/s", "latency-path")
+    bench_bcpnn()
+    bench_lm_decode()
 
 
 if __name__ == "__main__":

@@ -1,10 +1,13 @@
-"""Batched LM serving: prefill + continuous-batching decode.
+"""Batched LM serving: prefill + continuous-batching fused decode.
 
     PYTHONPATH=src python examples/serve_batched.py --arch yi-9b --requests 6
 
-Uses the reduced (smoke) config of any assigned architecture, generates
-greedy completions for a queue of prompts through the slot-based serving
-session, and reports per-request shapes + aggregate throughput.
+Uses the reduced (smoke) config of any assigned architecture and generates
+greedy completions for a queue of prompts through the unified serving API:
+``ServiceConfig`` binds the model to an ``InferenceService`` whose
+DecodePlan advances every decode slot in ONE jitted step over a fused slot
+axis (the legacy ``ServeSession`` paid one dispatch per slot per token).
+Prompt-length buckets bound the number of compiled prefill shapes.
 """
 import argparse
 import time
@@ -14,7 +17,7 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_smoke_config
 from repro.models import build_model
-from repro.runtime import Request, ServeSession
+from repro.runtime import Request, ServiceConfig, serve_model
 
 
 def main():
@@ -30,26 +33,34 @@ def main():
         raise SystemExit("serve_batched targets decoder-only archs")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    sess = ServeSession(model, params, max_batch=args.max_batch, max_seq=128)
+    service = serve_model(
+        model, params,
+        ServiceConfig(max_batch=args.max_batch, max_seq=128, buckets=(8, 24)),
+    )
 
     rng = np.random.default_rng(0)
-    reqs = [
-        Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, rng.integers(4, 24)).astype(np.int32),
-            max_new_tokens=args.max_new,
+    for i in range(args.requests):
+        service.submit(
+            Request(
+                rid=i,
+                prompt=rng.integers(
+                    0, cfg.vocab_size, rng.integers(4, 24)
+                ).astype(np.int32),
+                max_new_tokens=args.max_new,
+            )
         )
-        for i in range(args.requests)
-    ]
     t0 = time.perf_counter()
-    done = sess.generate(reqs)
+    done = service.drain()
     dt = time.perf_counter() - t0
     total_new = sum(len(c.tokens) for c in done)
     for c in sorted(done, key=lambda c: c.rid):
         print(f"req {c.rid}: prefill={c.prefill_len:3d} -> {c.tokens.tolist()}")
+    st = service.stats
     print(
         f"\n{len(done)} requests, {total_new} tokens in {dt:.1f}s "
-        f"({total_new/dt:.1f} tok/s on CPU, arch={args.arch})"
+        f"({total_new/dt:.1f} tok/s on CPU, arch={args.arch}, "
+        f"{st['fused_steps']} fused steps at mean occupancy "
+        f"{st['mean_occupancy']:.2f})"
     )
 
 

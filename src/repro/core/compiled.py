@@ -17,6 +17,7 @@ Keras' real power is ``compile()`` — one place where execution strategy
     compiled.evaluate((x_test, y_test))
     compiled.save("ckpts")                   # whole-network checkpoint
     sess = compiled.streaming()              # online updates, same jit cells
+    svc = compiled.serve(ServiceConfig(...)) # serving front door (ServePlan)
 
 Everything execution-strategic lives in :class:`ExecutionConfig`; the
 ``Network`` holds only the model description.  :class:`CompiledNetwork` owns
@@ -534,6 +535,37 @@ class CompiledNetwork:
             infer_cells=infer_lru,
             on_close=adopt,
         )
+
+    # -------------------------------------------------------------- serving
+    def serve(self, config=None):
+        """Bind this compiled network to an :class:`InferenceService` — the
+        serving mirror of the compile step.  ``ServiceConfig(plan=...)``
+        picks the strategy: "batched" (default — bucket-padded
+        classification through the SAME cached jitted forward ``predict``
+        uses, so service and library calls share one trace cache) or
+        "streaming" (the latency path: wraps :meth:`streaming` with its
+        coalescing buffer and state adoption).  Token decoding
+        (plan="decode") belongs to the LM zoo — use
+        ``repro.runtime.service.serve_model``."""
+        from repro.runtime.service import (
+            BatchedPlan,
+            InferenceService,
+            ServiceConfig,
+            StreamingPlan,
+        )
+
+        config = config if config is not None else ServiceConfig()
+        plan_name = config.plan or "batched"
+        if plan_name == "batched":
+            plan = BatchedPlan(self, config)
+        elif plan_name == "streaming":
+            plan = StreamingPlan(self, config)
+        else:
+            raise ValueError(
+                f"CompiledNetwork.serve supports plans 'batched'/'streaming';"
+                f" {plan_name!r} serves token decoding (use serve_model)"
+            )
+        return InferenceService(plan, config)
 
     # ----------------------------------------------------------- checkpoint
     def save(self, directory: str, step: int = 0, retain: int = 3) -> str:

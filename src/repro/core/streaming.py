@@ -18,6 +18,13 @@ least-recently-used cell instead of growing the cache without limit.
 Sessions constructed via ``CompiledNetwork.streaming()`` share ONE such
 bounded cache per layer across all of that network's sessions, and write
 their learned state back into the compiled NetworkState on close().
+
+Under the unified serving API this session is the substrate of
+:class:`repro.runtime.service.StreamingPlan`:
+``compiled.serve(ServiceConfig(plan="streaming", max_batch=, max_wait_s=,
+cache_size=))`` opens one of these sessions behind the InferenceService
+front door, so the coalescing/adoption behavior is identical whichever
+surface a caller uses.
 """
 from __future__ import annotations
 

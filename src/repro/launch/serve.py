@@ -2,8 +2,11 @@
 
     python -m repro.launch.serve --arch gemma3-1b --requests 8
 
-Smoke configs on CPU; the same entry point serves full configs on a pod
-mesh (decode caches sequence-sharded per the sharding rules).
+Routes through the unified serving API: ``ServiceConfig`` binds the model
+to an ``InferenceService`` whose DecodePlan advances all decode slots in
+one fused jitted step.  ``--smoke`` (default) uses the reduced config;
+``--full`` loads the real architecture (pod-mesh scale — decode caches
+sequence-sharded per the sharding rules).
 """
 from __future__ import annotations
 
@@ -13,9 +16,9 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models import build_model
-from repro.runtime import Request, ServeSession
+from repro.runtime import Request, ServiceConfig, serve_model
 
 
 def main():
@@ -24,26 +27,60 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=2)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--max-seq", type=int, default=96)
+    ap.add_argument(
+        "--buckets", type=int, nargs="*", default=None,
+        help="prompt-length padding buckets (bounds prefill traces)",
+    )
+    ap.add_argument(
+        "--policy", choices=("fcfs", "sjf"), default="fcfs",
+        help="queue admission order",
+    )
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument(
+        "--smoke", dest="smoke", action="store_true",
+        help="reduced config for CPU smoke runs (default)",
+    )
+    size.add_argument(
+        "--full", dest="smoke", action="store_false",
+        help="the real architecture config",
+    )
+    ap.set_defaults(smoke=True)
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch)
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "encdec":
         raise SystemExit("decoder-only serving CLI; use examples for enc-dec")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    sess = ServeSession(model, params, max_batch=args.max_batch, max_seq=96)
+    service = serve_model(
+        model, params,
+        ServiceConfig(
+            max_batch=args.max_batch,
+            max_seq=args.max_seq,
+            buckets=tuple(args.buckets) if args.buckets else None,
+            policy=args.policy,
+        ),
+    )
     rng = np.random.default_rng(0)
-    reqs = [
-        Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
-                max_new_tokens=args.max_new)
-        for i in range(args.requests)
-    ]
+    for i in range(args.requests):
+        service.submit(
+            Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                max_new_tokens=args.max_new,
+            )
+        )
     t0 = time.perf_counter()
-    done = sess.generate(reqs)
+    done = service.drain()
     dt = time.perf_counter() - t0
     tot = sum(len(c.tokens) for c in done)
-    print(f"[serve] {args.arch}: {len(done)} reqs, {tot} tokens, {tot/dt:.1f} tok/s")
+    st = service.stats
+    print(
+        f"[serve] {args.arch}: {len(done)} reqs, {tot} tokens, "
+        f"{tot/dt:.1f} tok/s ({st['fused_steps']} fused steps, "
+        f"mean occupancy {st['mean_occupancy']:.2f})"
+    )
 
 
 if __name__ == "__main__":

@@ -621,7 +621,14 @@ class CausalLM:
         elif fam == "hybrid":
             x, caches = self._prefill_hybrid(params, x, positions)
         x = norm_apply(cfg.norm, params["final_norm"], x)
-        x_last = x[:, -1:, :]
+        # Bucketed serving right-pads prompts to a shared length and passes
+        # the true last position: causal attention keeps every position
+        # <= last_pos independent of the pad tail, so gathering here is
+        # bit-identical to an exact-length prefill.
+        if "last_pos" in batch:
+            x_last = jax.lax.dynamic_slice_in_dim(x, batch["last_pos"], 1, axis=1)
+        else:
+            x_last = x[:, -1:, :]
         if cfg.tie_embeddings:
             logits = jnp.einsum(
                 "bsd,vd->bsv", x_last, cast(params["embed"]["table"], cfg),

@@ -1,7 +1,8 @@
 # Runtime: ExecutionPlan strategies (scan epoch engine + per-batch reference
 # loop) behind the compile-step API, fault-tolerant training loop
-# (checkpoint/restart, stragglers, elastic restore) + batched serving loop
-# (continuous slot reuse).
+# (checkpoint/restart, stragglers, elastic restore), and the serving
+# subsystem (ServiceConfig -> InferenceService -> ServePlan: batched /
+# fused slot-batched decode / streaming).
 from repro.runtime.epoch_engine import (
     epoch_sharding,
     hidden_epoch_fn,
@@ -10,13 +11,29 @@ from repro.runtime.epoch_engine import (
     stack_epoch,
 )
 from repro.runtime.plans import BatchPlan, ExecutionPlan, ScanPlan, make_plan
+from repro.runtime.service import (
+    SERVE_PLANS,
+    BatchedPlan,
+    Completion,
+    DecodePlan,
+    InferenceService,
+    Request,
+    ServePlan,
+    ServiceConfig,
+    StreamingPlan,
+    pad_cache_like,
+    serve_model,
+)
+from repro.runtime.serve_loop import ServeSession
 from repro.runtime.train_loop import TrainLoopConfig, TrainLoopResult, train_loop
-from repro.runtime.serve_loop import Completion, Request, ServeSession
 
 __all__ = [
     "epoch_sharding", "hidden_epoch_fn", "readout_epoch_fn",
     "sgd_epoch_fn", "stack_epoch",
     "BatchPlan", "ExecutionPlan", "ScanPlan", "make_plan",
     "TrainLoopConfig", "TrainLoopResult", "train_loop",
-    "Completion", "Request", "ServeSession",
+    "SERVE_PLANS", "BatchedPlan", "Completion", "DecodePlan",
+    "InferenceService", "Request", "ServePlan", "ServiceConfig",
+    "StreamingPlan", "pad_cache_like", "serve_model",
+    "ServeSession",
 ]

@@ -1,55 +1,58 @@
-"""Batched serving loop (continuous-batching-lite).
+"""DEPRECATED per-slot serving loop — superseded by the service subsystem.
 
-The paper's inference benchmark (Fig. 2b) measures single-image and batched
-throughput; for the LM zoo the analogue is prefill + decode serving.  This
-loop implements:
+New code should go through the unified serving API
+(:mod:`repro.runtime.service`)::
 
-* request queue -> fixed-slot batch (max_batch concurrent sequences);
-* one shared KV cache allocation, slots assigned per request (paged-lite);
-* prefill on admission (right-padded to the slot), greedy decode until EOS
-  or max_new_tokens, slot freed on completion and immediately refillable —
-  i.e., continuous batching at step granularity;
-* deterministic greedy sampling (argmax) for testability.
+    from repro.runtime import ServiceConfig, serve_model
+    service = serve_model(model, params, ServiceConfig(max_batch=4, max_seq=256))
+    done = service.generate(requests)
 
-Single-sequence caches are per-slot (init_cache(batch=1)) stacked on a slot
-axis, so admission never recompiles: the decode step is batch-shape-stable.
+:class:`ServeSession` is kept as the *numerical reference* for the fused
+slot-batched :class:`~repro.runtime.service.DecodePlan`: it advances one
+slot per jitted call per step (one dispatch per slot per token), which the
+parity tests in ``tests/test_service.py`` assert is token-for-token
+identical to the fused plan's single-dispatch step.  ``Request`` /
+``Completion`` now live in the service module and are re-exported here.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.service import Completion, Request, pad_cache_like
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (len,) int32
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-
-
-@dataclasses.dataclass
-class Completion:
-    rid: int
-    tokens: np.ndarray  # generated tokens
-    prefill_len: int
-    steps: int
+__all__ = ["Completion", "Request", "ServeSession"]
 
 
 class ServeSession:
-    """Slot-based batched generation over a CausalLM."""
+    """Slot-based batched generation over a CausalLM (per-slot reference).
+
+    .. deprecated:: PR 3
+       Use ``serve_model(model, params, ServiceConfig(...))`` — its
+       DecodePlan fuses all slots into one jitted decode step.
+    """
 
     def __init__(self, model, params, max_batch: int = 4, max_seq: int = 256):
+        warnings.warn(
+            "ServeSession is deprecated: route serving through "
+            "serve_model(model, params, ServiceConfig(...)) — its fused "
+            "slot-batched DecodePlan advances all slots in one jitted step",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.model = model
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
+        self._cache_template = jax.eval_shape(
+            lambda: model.init_cache(1, max_seq)
+        )
 
     def generate(self, requests: List[Request]) -> List[Completion]:
         """Process a list of requests with continuous slot reuse."""
@@ -74,8 +77,8 @@ class ServeSession:
                         "steps": 1,
                     }
 
-            # One decode step per active slot (batched per slot for clarity;
-            # the production path fuses slots into one batch axis).
+            # One decode step per active slot — the per-slot reference the
+            # fused DecodePlan is parity-tested against.
             for slot in range(self.max_batch):
                 st = active[slot]
                 if st is None:
@@ -107,16 +110,7 @@ class ServeSession:
         return done
 
     def _pad_cache(self, cache):
-        """Grow the prefill cache to max_seq so decode is shape-stable."""
-
-        def pad(a, name):
-            if name in ("k", "v", "ckv", "krope", "xk", "xv"):
-                pads = [(0, 0)] * a.ndim
-                pads[2] = (0, self.max_seq - a.shape[2])
-                return jnp.pad(a, pads)
-            return a
-
-        if isinstance(cache, dict):
-            return {k: (self._pad_cache(v) if isinstance(v, dict) else pad(v, k))
-                    for k, v in cache.items()}
-        return cache
+        """Grow the prefill cache to max_seq so decode is shape-stable —
+        structural pytree padding (every leaf grows to its init_cache
+        template shape), replacing the old leaf-name allowlist."""
+        return pad_cache_like(cache, self._cache_template)

@@ -1,0 +1,608 @@
+"""Unified serving subsystem: ``ServiceConfig -> InferenceService``.
+
+The inference-side mirror of the PR 2 compile step.  Training binds a
+declarative Network to one :class:`ExecutionPlan` via
+``network.compile(ExecutionConfig(...))``; serving binds a compiled model to
+one :class:`ServePlan` via::
+
+    service = compiled.serve(ServiceConfig(max_batch=64, buckets=(16, 64)))
+    scores  = service.predict(x)             # BCPNN classification (BatchedPlan)
+
+    service = serve_model(model, params, ServiceConfig(max_batch=8, max_seq=256))
+    done    = service.generate(requests)     # LM zoo decode (DecodePlan, fused)
+
+Three strategies, analogous to ScanPlan/BatchPlan on the training side:
+
+* :class:`BatchedPlan` — BCPNN classification through the compiled network's
+  *shared* jitted forward (the same callable ``compiled.predict`` uses), with
+  padding-bucket selection on the batch axis so a service facing arbitrary
+  request sizes compiles a bounded number of shapes.  Zero-padding rows never
+  changes real outputs (the forward is row-independent; property-tested).
+* :class:`DecodePlan` — prefill + continuous slot-batched decode for the LM
+  zoo.  The hot path is ONE jitted, shape-stable step over a fused slot axis:
+  per-slot ``(1, ...)`` caches live stacked in a single ``(max_batch, ...)``
+  pytree and every active slot advances through one ``vmap``'d
+  ``decode_step`` with per-slot positions — no per-slot Python-loop dispatch
+  (the seed ``ServeSession`` paid one jit call per slot per token).
+  Prompt-length padding buckets bound prefill traces for attention families;
+  prefill gathers last-position logits at the *true* prompt end
+  (``last_pos``), so bucketing is token-exact.  SSM/hybrid state caches are
+  position-dependent, so those families prefill at exact length (per-length
+  cells LRU-bounded by ``cache_size``).
+* :class:`StreamingPlan` — the latency-oriented online path: wraps the
+  compiled network's :class:`StreamingSession` (host-side coalescing,
+  LRU-bounded per-shape cells, state adoption on close) behind the same
+  front door.
+
+:class:`InferenceService` owns the request queue (admission control via
+``max_queue``, ordering via ``policy``: "fcfs" arrival order or "sjf"
+shortest-prompt-first) and delegates execution to its plan.  Slot
+admission/eviction — free slot -> prefill -> decode -> EOS/limit -> refill —
+lives inside DecodePlan, at step granularity (continuous batching).
+
+``pad_cache_like`` is the structural replacement for the seed's name-list
+cache-padding heuristic: every leaf grows to its template shape (from
+``jax.eval_shape`` of ``init_cache``), so new cache layouts (MLA latents,
+hybrid ssm+kv, enc-dec cross kv) pad correctly without name registration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.streaming import _LRUCells
+
+POLICIES = ("fcfs", "sjf")
+
+# Families whose decode cache is a position-dependent recurrent state: a
+# right-padded prefill would fold pad tokens into the state, so prompt
+# bucketing is disabled and prefill runs at exact length.
+_STATEFUL_FAMILIES = ("ssm", "hybrid")
+
+
+# --------------------------------------------------------------- requests
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray  # generated tokens
+    prefill_len: int
+    steps: int
+
+
+# ---------------------------------------------------------- cache padding
+def pad_cache_like(cache, template):
+    """Grow every leaf of ``cache`` to its ``template`` shape (trailing
+    zero-pad per axis).  ``template`` is typically
+    ``jax.eval_shape(lambda: model.init_cache(batch, max_seq))`` — purely
+    structural, so any cache pytree (GQA k/v, MLA latents, SSM states,
+    enc-dec cross kv) pads without a leaf-name registry."""
+
+    def pad(a, t):
+        if tuple(a.shape) == tuple(t.shape):
+            return a
+        if a.ndim != len(t.shape) or any(
+            s > ts for s, ts in zip(a.shape, t.shape)
+        ):
+            raise ValueError(
+                f"cache leaf of shape {tuple(a.shape)} cannot grow to "
+                f"template shape {tuple(t.shape)}"
+            )
+        return jnp.pad(a, [(0, ts - s) for s, ts in zip(a.shape, t.shape)])
+
+    return jax.tree_util.tree_map(pad, cache, template)
+
+
+# ------------------------------------------------------------------ config
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Everything about *how* a model serves, none of *what* it serves.
+
+    max_batch:  concurrent capacity — decode slots (DecodePlan), padding
+                chunk cap (BatchedPlan), coalescing micro-batch
+                (StreamingPlan).
+    max_seq:    decode cache length (prompt + generated), DecodePlan only.
+    buckets:    ascending padding buckets — prompt lengths for DecodePlan
+                prefill, batch sizes for BatchedPlan predict.  None = exact
+                shapes (jit traces per distinct size, LRU-bounded).
+    policy:     queue admission order: "fcfs" (arrival) or "sjf"
+                (shortest-prompt-first).
+    cache_size: LRU bound on per-shape jitted callables (prefill cells /
+                streaming cells).
+    plan:       "batched" | "decode" | "streaming"; None lets the entry
+                point pick its default (serve() -> batched, serve_model()
+                -> decode).
+    max_wait_s: StreamingPlan coalescing wait budget.
+    max_queue:  admission control — submit() beyond this depth is rejected
+                (None = unbounded).
+    """
+
+    max_batch: int = 4
+    max_seq: int = 256
+    buckets: Optional[Tuple[int, ...]] = None
+    policy: str = "fcfs"
+    cache_size: int = 8
+    plan: Optional[str] = None
+    max_wait_s: float = 0.0
+    max_queue: Optional[int] = None
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
+        if self.policy not in POLICIES:
+            raise ValueError(
+                f"Unknown policy {self.policy!r} (want one of {POLICIES})"
+            )
+        # Validate against the plan registry — the single source of truth —
+        # so registering a new ServePlan automatically extends configs.
+        if self.plan is not None and self.plan not in SERVE_PLANS:
+            raise ValueError(
+                f"Unknown plan {self.plan!r} (want one of {sorted(SERVE_PLANS)})"
+            )
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.buckets is not None:
+            b = tuple(int(x) for x in self.buckets)
+            if not b or any(x <= 0 for x in b) or list(b) != sorted(set(b)):
+                raise ValueError(
+                    f"buckets must be strictly ascending positive ints, got "
+                    f"{self.buckets!r}"
+                )
+            object.__setattr__(self, "buckets", b)
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest configured bucket >= n, or n itself when none fits."""
+        if self.buckets is not None:
+            for b in self.buckets:
+                if b >= n:
+                    return b
+        return n
+
+
+# ------------------------------------------------------------------- plans
+class ServePlan:
+    """Base serving strategy.  Subclasses implement the capability they
+    serve; calling an unsupported capability raises with the plan name."""
+
+    name: str = "?"
+
+    def __init__(self, config: ServiceConfig):
+        self.config = config
+
+    def _unsupported(self, what: str):
+        raise NotImplementedError(
+            f"{type(self).__name__} ({self.name!r}) does not serve {what}"
+        )
+
+    # capability surface -------------------------------------------------
+    def predict(self, x):
+        self._unsupported("predict()")
+
+    def generate(self, requests: List[Request]) -> List[Completion]:
+        self._unsupported("generate()")
+
+    def feed(self, sample) -> None:
+        self._unsupported("feed()")
+
+    def infer(self, sample):
+        self._unsupported("infer()")
+
+    def flush(self) -> None:  # default no-op: batch plans have no buffer
+        pass
+
+    def close(self) -> None:
+        pass
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {}
+
+
+class BatchedPlan(ServePlan):
+    """BCPNN classification through the compiled network's shared forward.
+
+    ``predict`` chunks the input along the batch axis (chunk cap =
+    ``max_batch`` or the largest bucket), pads each chunk up to its bucket
+    with zero rows, runs the SAME jitted forward ``compiled.predict`` uses,
+    and slices the pad off — identical outputs, bounded trace count."""
+
+    name = "batched"
+
+    def __init__(self, compiled, config: ServiceConfig):
+        super().__init__(config)
+        self.compiled = compiled
+        self._fwd = compiled._forward_fn()  # shared forward cache
+        self._requests = 0
+        self._rows = 0
+        self._padded_rows = 0
+
+    def _chunk_cap(self) -> int:
+        if self.config.buckets is not None:
+            return self.config.buckets[-1]
+        return self.config.max_batch
+
+    def predict(self, x) -> jnp.ndarray:
+        x = np.asarray(x)
+        if x.ndim == 1:
+            x = x[None, :]
+        cap = self._chunk_cap()
+        state = self.compiled.state
+        outs = []
+        for i in range(0, x.shape[0], cap):
+            xb = x[i : i + cap]
+            n = xb.shape[0]
+            m = self.config.bucket_for(n)
+            if m > n:
+                xb = np.concatenate(
+                    [xb, np.zeros((m - n,) + xb.shape[1:], xb.dtype)], axis=0
+                )
+                self._padded_rows += m - n
+            scores = self._fwd(state.layers, state.readout, jnp.asarray(xb))
+            outs.append(scores[:n])
+            self._rows += n
+        self._requests += 1
+        return jnp.concatenate(outs, axis=0)
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "requests": self._requests,
+            "rows": self._rows,
+            "padded_rows": self._padded_rows,
+        }
+
+
+class DecodePlan(ServePlan):
+    """Continuous slot-batched LM serving with a fused decode step.
+
+    Slots are admission units (one request each); their ``(1, ...)`` caches
+    live stacked on the leading axis of ONE ``(max_batch, ...)`` cache
+    pytree.  Every step, all slots advance together through a single jitted
+    ``vmap``'d ``decode_step`` with per-slot write positions — token-exact
+    vs the per-slot reference loop (parity-tested), one dispatch per token
+    instead of ``max_batch``."""
+
+    name = "decode"
+
+    def __init__(self, model, params, config: ServiceConfig):
+        super().__init__(config)
+        if getattr(model.cfg, "family", None) == "encdec":
+            raise ValueError(
+                "DecodePlan serves decoder-only models; enc-dec serving "
+                "needs a cross-attention prefill path"
+            )
+        if config.buckets is not None and config.buckets[-1] > config.max_seq:
+            raise ValueError(
+                f"prompt buckets {config.buckets} exceed max_seq="
+                f"{config.max_seq}: a bucketed prefill cache could not fit "
+                "the decode cache"
+            )
+        self.model = model
+        self.params = params
+        self._family = model.cfg.family
+        self._cache_template = jax.eval_shape(
+            lambda: model.init_cache(1, config.max_seq)
+        )
+        # Per-padded-length prefill cells, LRU-bounded like streaming cells.
+        self._prefill_cells = _LRUCells(config.cache_size)
+        self._fused = jax.jit(self._fused_step)
+        self._write = jax.jit(self._write_slot)
+        self._fused_steps = 0
+        self._slot_steps = 0
+        self._requests = 0
+        self._tokens = 0
+
+    # ---------------------------------------------------------- jit bodies
+    def _fused_step(self, params, caches, tokens, cur_lens):
+        """One decode step for ALL slots: (S,...) caches, (S,) tokens and
+        per-slot positions -> ((S,) next greedy tokens, new caches)."""
+
+        def one(cache, tok, cur_len):
+            logits, new_cache = self.model.decode_step(
+                params, cache, tok[None, None], cur_len
+            )
+            return logits[0], new_cache
+
+        logits, caches = jax.vmap(one)(caches, tokens, cur_lens)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+
+    def _write_slot(self, caches, cache_one, slot):
+        """Install one admitted request's (1, ...) cache at slot index."""
+        return jax.tree_util.tree_map(
+            lambda f, c: jax.lax.dynamic_update_index_in_dim(f, c, slot, 0),
+            caches,
+            cache_one,
+        )
+
+    # ------------------------------------------------------------- prefill
+    def _prompt_bucket(self, n: int) -> int:
+        if self._family in _STATEFUL_FAMILIES:
+            return n  # recurrent state would absorb pad tokens
+        return self.config.bucket_for(n)
+
+    def _prefill_one(self, prompt: np.ndarray):
+        """(first greedy token, structurally padded (1, max_seq) cache)."""
+        n = len(prompt)
+        if n < 1:
+            raise ValueError("empty prompt")
+        if n > self.config.max_seq:
+            raise ValueError(
+                f"prompt length {n} exceeds max_seq={self.config.max_seq}"
+            )
+        m = self._prompt_bucket(n)
+        cell = self._prefill_cells.get(m)
+        if cell is None:
+            # Close over the MODEL only (cells outlive trace eviction).
+            cell = jax.jit(
+                lambda params, batch, _m=self.model: _m.prefill(params, batch)
+            )
+            self._prefill_cells.put(m, cell)
+        tokens = np.zeros((1, m), np.int32)
+        tokens[0, :n] = prompt
+        # last_pos gathers logits at the true prompt end: causal attention
+        # makes positions <= last_pos independent of right-padding, so the
+        # bucketed prefill is bit-identical to an exact-length one.
+        logits, cache = cell(
+            self.params,
+            {"tokens": jnp.asarray(tokens),
+             "last_pos": jnp.asarray(n - 1, jnp.int32)},
+        )
+        cache = pad_cache_like(cache, self._cache_template)
+        return int(jnp.argmax(logits[0])), cache
+
+    # ------------------------------------------------------------ generate
+    def generate(self, requests: List[Request]) -> List[Completion]:
+        """Continuous batching: admit into free slots, advance all active
+        slots through the fused step, evict on EOS/limits, refill."""
+        cfg = self.config
+        S = cfg.max_batch
+        pending = list(requests)[::-1]  # pop() admits in order
+        active: List[Optional[Dict]] = [None] * S
+        done: List[Completion] = []
+        caches = jax.tree_util.tree_map(
+            lambda t: jnp.zeros((S,) + tuple(t.shape), t.dtype),
+            self._cache_template,
+        )
+
+        while pending or any(a is not None for a in active):
+            # Admission: fill free slots (prefill per admitted request).
+            for slot in range(S):
+                if active[slot] is None and pending:
+                    req = pending.pop()
+                    first, cache_one = self._prefill_one(req.prompt)
+                    caches = self._write(
+                        caches, cache_one, jnp.asarray(slot, jnp.int32)
+                    )
+                    active[slot] = {
+                        "req": req,
+                        "cur_len": len(req.prompt),
+                        "tokens": [first],
+                        "steps": 1,
+                    }
+                    self._requests += 1
+
+            # Eviction: retire finished slots (freed slots refill on the
+            # next admission pass, i.e. continuous batching at step
+            # granularity — same schedule as the per-slot reference loop).
+            advancing = []
+            for slot in range(S):
+                st = active[slot]
+                if st is None:
+                    continue
+                req = st["req"]
+                if (
+                    len(st["tokens"]) >= req.max_new_tokens
+                    or (req.eos_id is not None and st["tokens"][-1] == req.eos_id)
+                    or st["cur_len"] + 1 >= cfg.max_seq
+                ):
+                    done.append(
+                        Completion(
+                            rid=req.rid,
+                            tokens=np.asarray(st["tokens"], np.int32),
+                            prefill_len=len(req.prompt),
+                            steps=st["steps"],
+                        )
+                    )
+                    self._tokens += len(st["tokens"])
+                    active[slot] = None
+                    continue
+                advancing.append(slot)
+
+            if not advancing:
+                continue
+
+            # The fused hot path: ONE jitted dispatch advances every slot.
+            # Idle slots ride along with position 0 and a dead cache — their
+            # outputs are discarded and their cache is overwritten at the
+            # next admission, so the step stays shape-stable at (S, ...).
+            tokens = np.zeros(S, np.int32)
+            cur_lens = np.zeros(S, np.int32)
+            for slot in advancing:
+                tokens[slot] = active[slot]["tokens"][-1]
+                cur_lens[slot] = active[slot]["cur_len"]
+            nxt, caches = self._fused(
+                self.params, caches, jnp.asarray(tokens), jnp.asarray(cur_lens)
+            )
+            nxt = np.asarray(nxt)
+            for slot in advancing:
+                st = active[slot]
+                st["tokens"].append(int(nxt[slot]))
+                st["cur_len"] += 1
+                st["steps"] += 1
+            self._fused_steps += 1
+            self._slot_steps += len(advancing)
+        return done
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "requests": self._requests,
+            "tokens_generated": self._tokens,
+            "fused_steps": self._fused_steps,
+            "slot_steps": self._slot_steps,
+            "mean_occupancy": (
+                self._slot_steps / self._fused_steps if self._fused_steps else 0.0
+            ),
+            "prefill_cells": len(self._prefill_cells),
+            "prefill_cell_evictions": self._prefill_cells.evictions,
+        }
+
+
+class StreamingPlan(ServePlan):
+    """The latency path: online BCPNN updates/inference via the compiled
+    network's StreamingSession (coalescing buffer, shared LRU-bounded cells,
+    state adoption on close) behind the service front door."""
+
+    name = "streaming"
+
+    def __init__(self, compiled, config: ServiceConfig, layer: int = 0):
+        super().__init__(config)
+        self.session = compiled.streaming(
+            layer=layer,
+            max_batch=config.max_batch,
+            max_wait_s=config.max_wait_s,
+            cache_size=config.cache_size,
+        )
+
+    def feed(self, sample) -> None:
+        self.session.feed(sample)
+
+    def infer(self, sample):
+        return self.session.infer(sample)
+
+    def flush(self) -> None:
+        self.session.flush()
+
+    def close(self) -> None:
+        self.session.close()
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return self.session.stats
+
+
+SERVE_PLANS = {
+    BatchedPlan.name: BatchedPlan,
+    DecodePlan.name: DecodePlan,
+    StreamingPlan.name: StreamingPlan,
+}
+
+
+# ----------------------------------------------------------------- service
+class InferenceService:
+    """The serving front door: a request queue with admission control and
+    ordering policy, delegating execution to one bound ServePlan."""
+
+    def __init__(self, plan: ServePlan, config: ServiceConfig):
+        self.plan = plan
+        self.config = config
+        self._queue: Deque = deque()
+        self._rejected = 0
+
+    # --------------------------------------------------------------- queue
+    def submit(self, item) -> bool:
+        """Queue one work item (a Request for decode plans, a sample for
+        batched/streaming).  Returns False when max_queue rejects it."""
+        if (
+            self.config.max_queue is not None
+            and len(self._queue) >= self.config.max_queue
+        ):
+            self._rejected += 1
+            return False
+        self._queue.append(item)
+        return True
+
+    def _ordered(self, requests: List[Request]) -> List[Request]:
+        if self.config.policy == "sjf":
+            return sorted(requests, key=lambda r: len(r.prompt))  # stable
+        return list(requests)
+
+    def drain(self):
+        """Run everything queued through the plan: completions (decode),
+        stacked scores (batched), or a flush (streaming)."""
+        items = list(self._queue)
+        self._queue.clear()
+        if not items:
+            self.plan.flush()
+            # Decode plans always answer with completions, even for an
+            # empty queue (callers iterate the result).
+            return [] if self.plan.name == "decode" else None
+        if isinstance(items[0], Request):
+            return self.plan.generate(self._ordered(items))
+        if self.plan.name == "streaming":
+            for s in items:
+                self.plan.feed(s)
+            self.plan.flush()
+            return None
+        return self.plan.predict(np.stack([np.asarray(s) for s in items]))
+
+    # -------------------------------------------------- direct conveniences
+    def predict(self, x):
+        return self.plan.predict(x)
+
+    def generate(self, requests: List[Request]) -> List[Completion]:
+        return self.plan.generate(self._ordered(requests))
+
+    def feed(self, sample) -> None:
+        self.plan.feed(sample)
+
+    def infer(self, sample):
+        return self.plan.infer(sample)
+
+    def flush(self) -> None:
+        self.plan.flush()
+
+    def close(self) -> None:
+        self.plan.close()
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "plan": self.plan.name,
+            "queued": len(self._queue),
+            "rejected": self._rejected,
+            **self.plan.stats,
+        }
+
+
+def serve_model(model, params, config: Optional[ServiceConfig] = None) -> InferenceService:
+    """Bind an LM (CausalLM + params) to an InferenceService — the LM-zoo
+    twin of ``CompiledNetwork.serve``.  Only the decode plan applies."""
+    config = config if config is not None else ServiceConfig()
+    plan_name = config.plan or "decode"
+    if plan_name != "decode":
+        raise ValueError(
+            f"serve_model() serves token decoding; plan {plan_name!r} needs "
+            "a CompiledNetwork (use compiled.serve)"
+        )
+    return InferenceService(DecodePlan(model, params, config), config)
+
+
+__all__ = [
+    "POLICIES",
+    "Request",
+    "Completion",
+    "pad_cache_like",
+    "ServiceConfig",
+    "ServePlan",
+    "BatchedPlan",
+    "DecodePlan",
+    "StreamingPlan",
+    "SERVE_PLANS",
+    "InferenceService",
+    "serve_model",
+]
