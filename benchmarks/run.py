@@ -6,6 +6,7 @@
   fig2d  bench_scaling           strong scaling (fake multi-device)
   fig3   bench_precision         BF14..BF28 accuracy cliff
   sec4.3 bench_stl10             STL-10-scale run
+  issue4 bench_deep              depth sweep: project-once vs fused phases
   extra  bench_kernels           kernel-level roofline projections
 
 Prints ``name,value,unit,derived`` CSV rows; `python -m benchmarks.run`.
@@ -23,6 +24,7 @@ MODULES = [
     "bench_inference",
     "bench_precision",
     "bench_stl10",
+    "bench_deep",
     "bench_kernels",
     "bench_scaling",
 ]

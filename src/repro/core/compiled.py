@@ -14,6 +14,7 @@ Keras' real power is ``compile()`` — one place where execution strategy
         precision=PrecisionPolicy.named("bf20"),  # FPGA datapath emulation
     ))
     compiled.fit((x, y), epochs_hidden=5, epochs_readout=5)
+    compiled.fit((x, y), epochs_hidden=[20, 10, 5])  # per-layer schedule
     compiled.evaluate((x_test, y_test))
     compiled.save("ckpts")                   # whole-network checkpoint
     sess = compiled.streaming()              # online updates, same jit cells
@@ -25,6 +26,14 @@ a pure-functional :class:`NetworkState` pytree plus cached jitted callables
 for fit / partial_fit / predict / evaluate — nothing re-traces across calls
 unless the input schema changes (jit's own cache handles shape/structure
 variation within one cached callable).
+
+Training executes as a *phase program* (:mod:`repro.runtime.program`):
+fit/partial_fit arguments compile into an ordered list of hidden/readout
+phases, and at each phase boundary the dataset is projected ONCE through
+the newly-frozen prefix and cached (:mod:`repro.runtime.activations`) so
+epochs never recompute the frozen stack — the paper's staged greedy
+training made explicit.  ``ExecutionConfig(cache_activations=False)``
+selects the fused path, kept bit-exact as the parity reference.
 
 The legacy ``Network.fit(engine=..., trainer=...)`` signature survives as a
 deprecated shim that compiles on the fly and copies learned state back;
@@ -47,27 +56,43 @@ from repro.runtime.plans import PLANS, ExecutionPlan, make_plan
 READOUTS = ("bcpnn", "sgd")
 
 
+def build_head(layers) -> Callable:
+    """The readout head ``(states, readout_params, hb) -> scores`` over
+    level-H hidden codes.  ONE definition of the head branch logic — the
+    optional SGD head is an *argument* (jit's trace cache handles the
+    bcpnn<->sgd switch), and it was trained on the output of the FULL
+    hidden stack, so only a trailing DenseLayer is skipped when it is
+    active — shared by :func:`build_forward` (fused full-stack predict)
+    and ``CompiledNetwork._head_fn`` (project-once predict) so the two
+    surfaces cannot diverge.
+    """
+    n_hidden = len(layers) - 1 if isinstance(layers[-1], DenseLayer) else len(layers)
+
+    def head(states, readout_params, hb):
+        if readout_params is not None:
+            return hb @ readout_params["w"] + readout_params["b"]
+        if n_hidden < len(layers):
+            return layers[-1].forward(states[-1], hb)
+        return hb
+
+    return head
+
+
 def build_forward(layers) -> Callable:
     """One jitted full-network forward ``(states, readout_params, xb)``.
 
-    Shared by CompiledNetwork.predict and the legacy Network.predict shim —
-    a single definition keeps the two surfaces bit-identical.  The optional
-    SGD head is an *argument*, so the bcpnn<->sgd readout switch is handled
-    by jit's own trace cache without a Python-level rebuild.  The head was
-    trained on the output of the FULL hidden stack, so only a trailing
-    DenseLayer is skipped when the head is active — never a hidden layer.
+    Shared by CompiledNetwork's fused predict path, the legacy
+    Network.predict shim, and the serving BatchedPlan — a single definition
+    keeps the surfaces bit-identical.
     """
     n_hidden = len(layers) - 1 if isinstance(layers[-1], DenseLayer) else len(layers)
+    head = build_head(layers)
 
     def fwd(states, readout_params, xb):
         h = xb
         for layer, state in zip(layers[:n_hidden], states[:n_hidden]):
             h = layer.forward(state, h)
-        if readout_params is not None:
-            return h @ readout_params["w"] + readout_params["b"]
-        if n_hidden < len(layers):
-            return layers[-1].forward(states[-1], h)
-        return h
+        return head(states, readout_params, h)
 
     return jax.jit(fwd)
 
@@ -99,6 +124,14 @@ class ExecutionConfig:
     use_kernels: optional bool overriding every layer's Pallas-kernel flag
                  (None leaves the declared per-layer setting).
     donate:      donate scan carries/epoch buffers on accelerators.
+    cache_activations:    project-once training (default): at each phase
+                 boundary the dataset is projected once through the frozen
+                 prefix and cached (repro.runtime.activations), so epochs
+                 never recompute the frozen stack.  False selects the fused
+                 path — the bit-exact parity reference.
+    activation_budget_mb: device-memory budget for cached level-k
+                 activations; levels beyond it are spilled to host memory
+                 (epoch gathers fall back to the host path transparently).
     """
 
     engine: str = "scan"
@@ -106,6 +139,8 @@ class ExecutionConfig:
     precision: Any = None
     use_kernels: Optional[bool] = None
     donate: bool = True
+    cache_activations: bool = True
+    activation_budget_mb: float = 512.0
 
     def __post_init__(self):
         # Validate against the plan registry — the single source of truth —
@@ -114,6 +149,8 @@ class ExecutionConfig:
             raise ValueError(
                 f"Unknown engine {self.engine!r} (want one of {sorted(PLANS)})"
             )
+        if self.activation_budget_mb <= 0:
+            raise ValueError("activation_budget_mb must be positive")
         if isinstance(self.precision, str):
             from repro.precision.policy import PrecisionPolicy
 
@@ -160,9 +197,16 @@ class CompiledNetwork:
         )
         if self.config.trainer is not None:
             self.plan = self.config.trainer.decorate(self.plan)
+        # Project-once activation store (None on the fused parity path).
+        from repro.runtime.activations import store_for
+
+        self.activations = store_for(
+            self.layers, self.config, trainer=self.config.trainer
+        )
         self._rng = rng if rng is not None else np.random.default_rng(network.seed)
         # Cached jitted callables (satellite: predict used to re-jit per call).
         self._fwd: Optional[Callable] = None
+        self._head: Optional[Callable] = None
         # Hybrid-readout machinery cached across fit/partial_fit calls.
         self._sgd_cache: dict = {}
         self._sgd_opt_state = None
@@ -188,10 +232,36 @@ class CompiledNetwork:
             self._fwd = build_forward(self.layers)
         return self._fwd
 
+    def _head_fn(self) -> Callable:
+        """Jitted readout head over pre-projected level-H hidden codes —
+        the project-once mirror of :func:`build_forward`, sharing the ONE
+        :func:`build_head` definition (the hidden stack is replaced by the
+        ActivationStore projection)."""
+        if self._head is None:
+            self._head = jax.jit(build_head(self.layers))
+        return self._head
+
     def predict(self, x, batch_size: int = 1024) -> jnp.ndarray:
-        """Class scores for a batch of inputs (whole stack, cached jit)."""
-        fwd = self._forward_fn()
+        """Class scores for a batch of inputs (cached jit).
+
+        With the activation store enabled the hidden stack runs through the
+        SAME level-H projection training used — so repeated predict/evaluate
+        on one dataset (and predict right after fit on the train set) skip
+        the frozen stack entirely; only the readout head runs per call."""
         outs = []
+        if self.activations is not None and self.hidden_layers:
+            n_hidden = len(self.hidden_layers)
+            h = self.activations.level(
+                n_hidden, list(self.state.layers), x, chunk=batch_size
+            )
+            head = self._head_fn()
+            for i in range(0, h.shape[0], batch_size):
+                outs.append(
+                    head(self.state.layers, self.state.readout,
+                         jnp.asarray(h[i : i + batch_size]))
+                )
+            return jnp.concatenate(outs, axis=0)
+        fwd = self._forward_fn()
         for i in range(0, x.shape[0], batch_size):
             outs.append(
                 fwd(self.state.layers, self.state.readout,
@@ -210,7 +280,7 @@ class CompiledNetwork:
     def fit(
         self,
         dataset,
-        epochs_hidden: int = 10,
+        epochs_hidden=10,
         epochs_readout: int = 10,
         batch_size: int = 128,
         readout: str = "bcpnn",
@@ -218,9 +288,17 @@ class CompiledNetwork:
         shuffle: bool = True,
         verbose: bool = False,
     ):
-        """Two-phase BCPNN training (Alg. 1 + supervised readout) through the
-        compiled plan.  Engine, trainer, and precision were fixed at compile
-        time; only training-objective knobs remain here."""
+        """Phase-program BCPNN training (Alg. 1 + supervised readout)
+        through the compiled plan.  Engine, trainer, precision, and the
+        project-once activation cache were fixed at compile time; only
+        training-objective knobs remain here.
+
+        ``epochs_hidden`` is either one epoch count for every hidden layer
+        or a per-layer schedule (``epochs_hidden=[20, 10, 5]`` for a
+        three-layer greedy stack); the arguments compile into a
+        :class:`repro.runtime.program.TrainProgram` executed phase by
+        phase, with per-epoch wall-time recorded in the result's
+        ``history`` (``seconds`` field)."""
         from repro.core.network import FitResult
 
         t0 = time.perf_counter()
@@ -273,11 +351,20 @@ class CompiledNetwork:
             history=history,
         )
 
-    # The one training driver: both engines, both readouts, fit+partial_fit.
+    # The one training driver: fit and partial_fit both compile their
+    # arguments into a TrainProgram (repro.runtime.program) and hand it to
+    # the phase-program executor, which routes each phase through the bound
+    # plan's cached (project-once) or fused epoch runners.
     def _run(
         self, dataset, epochs_hidden, epochs_readout, batch_size, readout,
         readout_lr, shuffle, verbose, history, reset_readout,
     ) -> None:
+        from repro.runtime.program import (
+            HiddenPhase,
+            compile_program,
+            run_program,
+        )
+
         x, y = dataset
         n_total = x.shape[0]
         if n_total == 0:
@@ -301,88 +388,48 @@ class CompiledNetwork:
                 {"phase": "ragged_tail_dropped", "samples": n_total - n}
             )
 
-        states = list(self.state.layers)
-        plan = self.plan
-
-        # Phase 1: unsupervised, layer by layer (greedy stacking).
-        for li, layer in enumerate(self.hidden_layers):
-            run_epoch = plan.hidden_epoch(li)
-            state = self._donation_safe(plan.place_state(layer, states[li]))
-            below_states = states[:li]
-            for epoch in range(epochs_hidden):
-                idx = self._epoch_indices(n, n_total, shuffle)
-                state = run_epoch(state, below_states, x, idx, batch_size)
-                if verbose:
-                    print(
-                        f"[fit/{plan.name}] hidden layer {li} epoch "
-                        f"{epoch + 1}/{epochs_hidden}"
-                    )
-                history.append({"phase": f"hidden{li}", "epoch": epoch})
-            states[li] = state
-            # Publish each finished layer immediately so an exception in a
-            # later phase leaves self.state referencing only live buffers
-            # (the scan plan donates its carries on accelerators).
-            self.state = NetworkState(tuple(states), self.state.readout)
-
-        # Phase 2: supervised readout on frozen hidden representations.
-        # (readout="sgd" with zero epochs still initializes the readout head,
-        # matching the legacy fit path.)  A stale SGD head is only dropped
-        # below, AFTER a BCPNN readout actually trains a replacement — never
-        # unconditionally, which would leave headless networks (or
-        # epochs_readout=0 fits) with no classifier at all.
-        readout_params = self.state.readout
-        wants_readout = epochs_readout > 0 or readout == "sgd"
-        if wants_readout and y is None:
+        program = compile_program(
+            len(self.hidden_layers), epochs_hidden, epochs_readout, readout,
+            readout_lr=readout_lr, reset_readout=reset_readout,
+        )
+        if y is None and any(
+            not isinstance(p, HiddenPhase) for p in program.phases
+        ):
             raise ValueError(
                 "readout training requires labels: pass (x, y), or run "
                 "hidden-only with epochs_readout=0 (fit) / readout=None "
                 "(partial_fit)"
             )
-        if wants_readout:
-            if readout == "bcpnn":
-                states = self._run_bcpnn_readout(
-                    states, x, y, n, n_total, epochs_readout, batch_size,
-                    shuffle, history, verbose,
-                )
-                # Training the BCPNN readout makes the DenseLayer
-                # authoritative — drop any SGD head so predict() sees the
-                # work just done (also on incremental partial_fit calls).
-                if self.readout_layer is not None:
-                    readout_params = None
-            else:
-                readout_params = self._run_sgd_readout(
-                    states, x, y, n, n_total, epochs_readout, batch_size,
-                    shuffle, history, verbose, readout_lr, reset_readout,
-                )
+        if verbose:
+            print(f"[fit/{self.plan.name}] program: {program.describe()}")
 
-        self.state = NetworkState(layers=tuple(states), readout=readout_params)
+        result = run_program(
+            self, program, x, y, n, n_total, batch_size, shuffle, verbose,
+            history,
+        )
 
-    def _run_bcpnn_readout(
-        self, states, x, y, n, n_total, epochs, batch_size, shuffle, history,
-        verbose,
-    ):
-        layer = self.readout_layer
-        if layer is None:
-            return states
-        li = len(self.layers) - 1
-        run_epoch = self.plan.readout_epoch()
-        state = self._donation_safe(self.plan.place_state(layer, states[li]))
-        hidden_states = states[:li]
-        for epoch in range(epochs):
-            idx = self._epoch_indices(n, n_total, shuffle)
-            state = run_epoch(state, hidden_states, x, y, idx, batch_size)
-            if verbose:
-                print(f"[fit/{self.plan.name}] readout epoch {epoch + 1}/{epochs}")
-            history.append({"phase": "readout", "epoch": epoch})
-        states[li] = state
-        return states
+        # Readout-head bookkeeping.  A stale SGD head is only dropped AFTER
+        # a BCPNN readout actually trains a replacement — never
+        # unconditionally, which would leave headless networks (or
+        # epochs_readout=0 fits) with no classifier at all.
+        readout_params = self.state.readout
+        if result.bcpnn_trained and self.readout_layer is not None:
+            # Training the BCPNN readout makes the DenseLayer authoritative
+            # — drop any SGD head so predict() sees the work just done.
+            readout_params = None
+        if result.sgd_ran:
+            readout_params = result.sgd_params
+        self.state = NetworkState(
+            layers=self.state.layers, readout=readout_params
+        )
 
-    def _run_sgd_readout(
-        self, states, x, y, n, n_total, epochs, batch_size, shuffle, history,
-        verbose, lr, reset,
-    ) -> dict:
-        """Hybrid readout: AdamW + cross-entropy on frozen hidden reps — the
-        paper's 97.5%+ MNIST configuration."""
+    def _sgd_setup(self, y, lr: float, reset: bool):
+        """Hybrid-readout machinery for one SgdReadoutPhase: (params,
+        opt_state, epoch runner) — AdamW + cross-entropy on frozen hidden
+        reps, the paper's 97.5%+ MNIST configuration.  The runner matches
+        the compiled network's execution mode (cached level-H inputs when
+        the activation store is on, fused otherwise) and is cached across
+        fit/partial_fit calls."""
         from repro.core.network import sgd_readout_setup
 
         n_hidden = self.hidden_layers[-1].spec.n_post
@@ -414,7 +461,11 @@ class CompiledNetwork:
                 self.network.seed, n_hidden, y, lr, n_classes=n_classes,
                 init_params=not resume,
             )
-            run_epoch = self.plan.sgd_epoch(opt, loss_fn)
+            run_epoch = (
+                self.plan.sgd_epoch_cached(opt, loss_fn)
+                if self.activations is not None
+                else self.plan.sgd_epoch(opt, loss_fn)
+            )
             self._sgd_cache[key] = (opt, loss_fn, run_epoch)
         else:
             opt, loss_fn, run_epoch = cached
@@ -435,21 +486,7 @@ class CompiledNetwork:
             params, _, opt_state, _ = sgd_readout_setup(
                 self.network.seed, n_hidden, y, lr, n_classes=n_classes
             )
-
-        hidden_states = states[: len(self.hidden_layers)]
-        for epoch in range(epochs):
-            idx = self._epoch_indices(n, n_total, shuffle)
-            params, opt_state, loss = run_epoch(
-                params, opt_state, hidden_states, x, y, idx, batch_size
-            )
-            if verbose:
-                print(
-                    f"[fit/{self.plan.name}] sgd readout epoch "
-                    f"{epoch + 1}/{epochs} loss={float(loss):.4f}"
-                )
-            history.append({"phase": "sgd_readout", "epoch": epoch})
-        self._sgd_opt_state = opt_state
-        return params
+        return params, opt_state, run_epoch
 
     def _donation_safe(self, state):
         """A copy of ``state`` when the plan will donate its carry, so the

@@ -127,6 +127,14 @@ class DataParallelTrainer:
     def batch_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, P(self.baxes, None))
 
+    def cache_sharding(self, ndim: int = 2) -> NamedSharding:
+        """Placement for a cached ``(n_samples, ...)`` level-k activation
+        array (repro.runtime.activations): rows sharded over the batch mesh
+        axes, so project-once caches live distributed and the per-epoch
+        ``jnp.take`` gather + epoch_sharding placement never funnel the
+        whole level through one device."""
+        return NamedSharding(self.mesh, P(self.baxes, *(None,) * (ndim - 1)))
+
     def place_state(self, layer, state: LayerState) -> LayerState:
         """Device-put a layer state with the trainer's shardings."""
         spec = self._state_spec(layer, self._can_shard_hidden(layer))
@@ -194,8 +202,14 @@ class DataParallelTrainer:
                 else None
             )
             # Forward on the local hidden shard; softmax is HCU-local so no
-            # collective is needed (HCUs never straddle shards).
+            # collective is needed (HCUs never straddle shards).  The
+            # soft-WTA gain must scale the support exactly as
+            # learning.forward does — omitting it silently diverged
+            # shard_map training from the single-device and pjit paths for
+            # any gain != 1 layer (caught by the deep-network parity test).
             s = xb @ (state.w * mask if mask is not None else state.w) + state.b
+            if spec.gain != 1.0:
+                s = s * spec.gain
             post_layout = _local_post(spec.post, state.w)
             aj = learning.hcu_softmax(s, post_layout)
             if supervised:

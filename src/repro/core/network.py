@@ -42,9 +42,16 @@ from repro.core.layers import DenseLayer, LayerState, StructuralPlasticityLayer
 
 @dataclasses.dataclass
 class FitResult:
-    """Bookkeeping returned by ``fit``/``partial_fit``."""
+    """Bookkeeping returned by ``fit``/``partial_fit``.
 
-    epochs_hidden: int
+    ``epochs_hidden`` echoes the request: one int for every hidden layer or
+    a per-layer schedule list.  ``history`` holds one entry per executed
+    epoch (``{"phase", "epoch", "seconds"}``) plus ``project`` entries for
+    each phase-boundary activation projection, so per-phase wall-time is
+    observable from the API.
+    """
+
+    epochs_hidden: Any
     epochs_readout: int
     batch_size: int
     wall_time_s: float

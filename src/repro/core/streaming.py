@@ -18,6 +18,10 @@ least-recently-used cell instead of growing the cache without limit.
 Sessions constructed via ``CompiledNetwork.streaming()`` share ONE such
 bounded cache per layer across all of that network's sessions, and write
 their learned state back into the compiled NetworkState on close().
+Adoption publishes a NEW LayerState object, which is exactly what the
+project-once ActivationStore keys its cache validity on — closing a
+session over layer k invalidates every cached level above k, so a
+subsequent fit/predict re-projects instead of reading stale activations.
 
 Under the unified serving API this session is the substrate of
 :class:`repro.runtime.service.StreamingPlan`:

@@ -1,16 +1,30 @@
 # Runtime: ExecutionPlan strategies (scan epoch engine + per-batch reference
-# loop) behind the compile-step API, fault-tolerant training loop
+# loop) behind the compile-step API, the phase-program trainer (TrainProgram
+# over a project-once ActivationStore), fault-tolerant training loop
 # (checkpoint/restart, stragglers, elastic restore), and the serving
 # subsystem (ServiceConfig -> InferenceService -> ServePlan: batched /
 # fused slot-batched decode / streaming).
+from repro.runtime.activations import ActivationStore, store_for
 from repro.runtime.epoch_engine import (
     epoch_sharding,
+    gather_batch,
+    hidden_epoch_cached_fn,
     hidden_epoch_fn,
+    readout_epoch_cached_fn,
     readout_epoch_fn,
+    sgd_epoch_cached_fn,
     sgd_epoch_fn,
     stack_epoch,
 )
 from repro.runtime.plans import BatchPlan, ExecutionPlan, ScanPlan, make_plan
+from repro.runtime.program import (
+    BcpnnReadoutPhase,
+    HiddenPhase,
+    SgdReadoutPhase,
+    TrainProgram,
+    compile_program,
+    run_program,
+)
 from repro.runtime.service import (
     SERVE_PLANS,
     BatchedPlan,
@@ -28,9 +42,13 @@ from repro.runtime.serve_loop import ServeSession
 from repro.runtime.train_loop import TrainLoopConfig, TrainLoopResult, train_loop
 
 __all__ = [
-    "epoch_sharding", "hidden_epoch_fn", "readout_epoch_fn",
-    "sgd_epoch_fn", "stack_epoch",
+    "ActivationStore", "store_for",
+    "epoch_sharding", "gather_batch", "hidden_epoch_cached_fn",
+    "hidden_epoch_fn", "readout_epoch_cached_fn", "readout_epoch_fn",
+    "sgd_epoch_cached_fn", "sgd_epoch_fn", "stack_epoch",
     "BatchPlan", "ExecutionPlan", "ScanPlan", "make_plan",
+    "BcpnnReadoutPhase", "HiddenPhase", "SgdReadoutPhase",
+    "TrainProgram", "compile_program", "run_program",
     "TrainLoopConfig", "TrainLoopResult", "train_loop",
     "SERVE_PLANS", "BatchedPlan", "Completion", "DecodePlan",
     "InferenceService", "Request", "ServePlan", "ServiceConfig",

@@ -1,0 +1,252 @@
+"""Project-once activation store for phase-program training.
+
+The paper's training scheme is explicitly staged: greedy layer-by-layer
+Hebbian epochs, then a supervised readout on *frozen* representations.  The
+fused execution path recomputes the frozen stack below the training layer
+inside every scan body — a depth-D network pays O(D^2 * epochs) redundant
+frozen forwards and re-transfers the raw input every epoch even when the
+layer's true input is a much smaller hidden code.
+
+:class:`ActivationStore` exploits the staging instead: at each phase
+boundary the dataset is projected ONCE through the newly-frozen prefix with
+a single jitted batched ``lax.scan`` and the level-k representation is
+cached.  Epoch shuffles then gather rows from the cached level-k array
+(`jnp.take` on device), so the per-epoch scan bodies contain no frozen
+forward at all (the ``*_epoch_cached_fn`` builders in
+:mod:`repro.runtime.epoch_engine`).
+
+Residency is governed by a byte budget (``ExecutionConfig(
+activation_budget_mb=...)``): cached levels live on device until the budget
+is exceeded, then the least-recently-used level is spilled to host memory
+(the epoch gather transparently falls back to the host path).  Projection
+chunking uses the caller's batch size and pads the ragged tail to a full
+chunk, so every row is produced by a GEMM of exactly the shape the fused
+path would have used — this is what keeps the cached and fused paths
+bit-exact (asserted in ``tests/test_deep_networks.py``).
+
+Invalidation is by object identity: an entry records the exact
+``LayerState`` objects (and the dataset array) it was projected from, and is
+valid only while ``states[:k]`` still *are* those objects.  Training a
+layer, ``partial_fit`` on a new chunk, a checkpoint ``load()``, or a
+streaming session adopting state on close all publish new state objects, so
+upstream changes invalidate exactly the levels above them — no version
+counters to keep in sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.epoch_engine import forward_stack
+
+
+@dataclasses.dataclass
+class _Entry:
+    """One cached level-k representation."""
+
+    value: Any  # jnp.ndarray (device) or np.ndarray (host-spilled)
+    states: Tuple[Any, ...]  # the frozen states[:k] it was projected from
+    x: Any  # the dataset array it was projected from (identity anchor)
+    nbytes: int
+    on_host: bool
+    tick: int  # LRU clock
+
+    def valid_for(self, states: Sequence[Any], x: Any) -> bool:
+        return (
+            self.x is x
+            and len(self.states) <= len(states)
+            and all(a is b for a, b in zip(self.states, states))
+        )
+
+
+class ActivationStore:
+    """Cached frozen-prefix projections of one dataset, keyed by level.
+
+    ``level(k, states, x, chunk)`` returns the representation of ``x`` after
+    the first ``k`` layers (level 0 is ``x`` itself, returned as-is).  The
+    projection starts from the deepest still-valid cached level below ``k``,
+    so a phase boundary costs one pass through only the newly-frozen layers.
+
+    One entry is kept per level; asking for a different dataset (e.g.
+    ``evaluate`` on the test set after ``fit`` on the train set) replaces the
+    stale entries rather than caching both — the serving/eval reuse of
+    multi-dataset projections is a ROADMAP follow-on.
+    """
+
+    def __init__(
+        self,
+        layers: Sequence[Any],
+        budget_bytes: int = 512 << 20,
+        place: Optional[Callable] = None,
+    ):
+        self.layers = list(layers)
+        self.budget_bytes = int(budget_bytes)
+        self._place = place  # device placement hook (trainer cache_sharding)
+        self._entries: Dict[int, _Entry] = {}
+        self._proj_scan: Dict[Tuple[int, int], Callable] = {}
+        self._proj_chunk: Dict[Tuple[int, int], Callable] = {}
+        self._tick = 0
+        self.stats = {"projections": 0, "hits": 0, "spills": 0, "evictions": 0}
+
+    # ------------------------------------------------------------- interface
+    def level(self, k: int, states: Sequence[Any], x, chunk: int):
+        """Representation of ``x`` at level ``k`` under frozen ``states[:k]``."""
+        if k == 0:
+            return x
+        if not 0 < k <= len(self.layers):
+            raise ValueError(f"level {k} out of range for {len(self.layers)} layers")
+        self._purge(states, x)
+        entry = self._entries.get(k)
+        if entry is not None:
+            self.stats["hits"] += 1
+            entry.tick = self._next_tick()
+            return entry.value
+        base, j = x, 0
+        for lvl in sorted(self._entries, reverse=True):
+            if lvl < k:
+                base, j = self._entries[lvl].value, lvl
+                break
+        value = self._project(base, j, k, states, chunk)
+        self._insert(k, value, states, x)
+        return self._entries[k].value
+
+    def invalidate(self) -> None:
+        """Drop every cached level (e.g. before freeing the network)."""
+        self._entries.clear()
+
+    @property
+    def device_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values() if not e.on_host)
+
+    def resident(self, k: int) -> Optional[str]:
+        """'device' / 'host' for a cached level, None when not cached."""
+        e = self._entries.get(k)
+        if e is None:
+            return None
+        return "host" if e.on_host else "device"
+
+    # -------------------------------------------------------------- plumbing
+    def _next_tick(self) -> int:
+        self._tick += 1
+        return self._tick
+
+    def _purge(self, states: Sequence[Any], x) -> None:
+        """Drop entries invalidated by upstream state changes or a new
+        dataset, so stale entries never pin superseded buffers."""
+        stale = [k for k, e in self._entries.items() if not e.valid_for(states, x)]
+        for k in stale:
+            del self._entries[k]
+            self.stats["evictions"] += 1
+
+    def _project(self, base, j: int, k: int, states: Sequence[Any], chunk: int):
+        """One batched pass of ``base`` (level j) through layers[j:k].
+
+        Full chunks run as ONE jitted scan over a ``(n_full, chunk, F)``
+        stack; the ragged tail is zero-padded to a full chunk and sliced, so
+        every row sees the same GEMM shape as a training batch — the
+        bit-exactness contract with the fused path.
+        """
+        self.stats["projections"] += 1
+        frozen = tuple(states[j:k])
+        n = base.shape[0]
+        chunk = min(chunk, n)
+        n_full, rem = divmod(n, chunk)
+        parts = []
+        if n_full:
+            xs = self._as_chunks(base, n_full, chunk)
+            ys = self._scan_fn(j, k)(frozen, xs)
+            parts.append(ys.reshape(n_full * chunk, *ys.shape[2:]))
+        if rem:
+            tail = base[n_full * chunk :]
+            pad = jnp.zeros if isinstance(tail, jax.Array) else np.zeros
+            padded = jnp.concatenate(
+                [jnp.asarray(tail), pad((chunk - rem, *tail.shape[1:]), tail.dtype)]
+            )
+            parts.append(self._chunk_fn(j, k)(frozen, padded)[:rem])
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+    @staticmethod
+    def _as_chunks(base, n_full: int, chunk: int):
+        head = base[: n_full * chunk]
+        shape = (n_full, chunk, *base.shape[1:])
+        if isinstance(head, jax.Array):
+            return head.reshape(shape)
+        return np.ascontiguousarray(head).reshape(shape)
+
+    def _scan_fn(self, j: int, k: int) -> Callable:
+        fn = self._proj_scan.get((j, k))
+        if fn is None:
+            fwd = forward_stack(self.layers[j:k])
+
+            def project(frozen, xs):
+                def body(_, xb):
+                    return None, fwd(frozen, xb)
+
+                _, ys = jax.lax.scan(body, None, xs)
+                return ys
+
+            fn = jax.jit(project)
+            self._proj_scan[(j, k)] = fn
+        return fn
+
+    def _chunk_fn(self, j: int, k: int) -> Callable:
+        fn = self._proj_chunk.get((j, k))
+        if fn is None:
+            fn = jax.jit(forward_stack(self.layers[j:k]))
+            self._proj_chunk[(j, k)] = fn
+        return fn
+
+    def _insert(self, k: int, value, states: Sequence[Any], x) -> None:
+        nbytes = int(value.nbytes)
+        on_host = nbytes > self.budget_bytes
+        if not on_host:
+            # Spill least-recently-used device levels until this one fits.
+            while self.device_bytes + nbytes > self.budget_bytes:
+                victims = [
+                    (e.tick, lvl)
+                    for lvl, e in self._entries.items()
+                    if not e.on_host
+                ]
+                if not victims:
+                    break
+                _, lvl = min(victims)
+                entry = self._entries[lvl]
+                entry.value = np.asarray(entry.value)
+                entry.on_host = True
+                self.stats["spills"] += 1
+        if on_host:
+            value = np.asarray(value)
+            self.stats["spills"] += 1
+        else:
+            value = jnp.asarray(value)
+            if self._place is not None:
+                value = self._place(value)
+        self._entries[k] = _Entry(
+            value=value,
+            states=tuple(states[:k]),
+            x=x,
+            nbytes=nbytes,
+            on_host=on_host,
+            tick=self._next_tick(),
+        )
+
+
+def store_for(layers: Sequence[Any], config, trainer=None) -> "ActivationStore":
+    """Build the store an :class:`ExecutionConfig` asks for (None when the
+    fused path is selected).  With a DataParallelTrainer, device-resident
+    levels are placed row-sharded over the batch axes
+    (``trainer.cache_sharding``) so epoch gathers stay distributed."""
+    if not getattr(config, "cache_activations", True):
+        return None
+    place = None
+    if trainer is not None:
+        place = lambda a: jax.device_put(a, trainer.cache_sharding(a.ndim))  # noqa: E731
+    budget = int(float(config.activation_budget_mb) * (1 << 20))
+    return ActivationStore(layers, budget_bytes=budget, place=place)
+
+
+__all__ = ["ActivationStore", "store_for"]

@@ -12,7 +12,12 @@ module keeps the whole Alg. 1 inner loop resident on the device:
 * the ``*_epoch_fn`` builders wrap a per-batch transition into a single
   jitted, buffer-donated ``lax.scan`` over the leading batch axis — the
   hidden Hebbian phase, the BCPNN readout phase, and the SGD readout phase
-  each get a scan body.
+  each get a scan body;
+* the ``*_epoch_cached_fn`` builders are the project-once variants: their
+  inputs are pre-projected level-k representations from the
+  :class:`repro.runtime.activations.ActivationStore`, so the scan bodies
+  contain no frozen-stack forward at all (the fused builders stay as the
+  bit-exact parity reference).
 
 Numerics are bit-identical to the per-batch loop modulo reduction order:
 the scan body runs exactly the per-batch transition (including the
@@ -42,26 +47,39 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def stack_epoch(
-    arr: np.ndarray,
+    arr,
     idx: np.ndarray,
     batch_size: int,
     sharding: Optional[NamedSharding] = None,
 ) -> jnp.ndarray:
     """Gather a shuffled epoch and reshape to ``(n_batches, B, ...)``.
 
-    One contiguous host-side gather, one device transfer — versus one
-    transfer per batch in the per-batch loop.  ``idx`` must already be
-    trimmed to a multiple of ``batch_size``.
+    Host arrays: one contiguous host-side gather, one device transfer —
+    versus one transfer per batch in the per-batch loop.  Arrays already on
+    device (a ``jax.Array`` input or the device-resident activation cache)
+    gather with ``jnp.take`` instead, so the epoch never round-trips through
+    host memory.  ``idx`` must already be trimmed to a multiple of
+    ``batch_size``.
     """
     n = idx.shape[0]
     if n % batch_size != 0:
         raise ValueError(f"epoch of {n} samples is not a multiple of B={batch_size}")
-    stacked = np.ascontiguousarray(arr[idx]).reshape(
-        n // batch_size, batch_size, *arr.shape[1:]
-    )
+    shape = (n // batch_size, batch_size, *arr.shape[1:])
+    if isinstance(arr, jax.Array):
+        stacked = jnp.take(arr, jnp.asarray(idx), axis=0).reshape(shape)
+        return jax.device_put(stacked, sharding) if sharding is not None else stacked
+    stacked = np.ascontiguousarray(arr[idx]).reshape(shape)
     if sharding is not None:
         return jax.device_put(stacked, sharding)
     return jnp.asarray(stacked)
+
+
+def gather_batch(arr, sel: np.ndarray) -> jnp.ndarray:
+    """One batch gather for the per-batch reference loop: ``jnp.take`` when
+    ``arr`` is device-resident, host fancy-indexing otherwise."""
+    if isinstance(arr, jax.Array):
+        return jnp.take(arr, jnp.asarray(sel), axis=0)
+    return jnp.asarray(arr[sel])
 
 
 def epoch_sharding(trainer, ndim: int) -> Optional[NamedSharding]:
@@ -179,3 +197,70 @@ def sgd_epoch_fn(
         return params, opt_state, losses
 
     return jax.jit(epoch, **_donate(donate, 0, 1, 3, 4))
+
+
+# --------------------------------------------------------------------------
+# Cached-input (project-once) variants.  ``xs`` is already the layer's own
+# input representation — gathered from the ActivationStore's cached level-k
+# array — so the scan bodies contain NO frozen-stack forward.  This is the
+# phase-program fast path; the fused builders above remain the parity
+# reference (ExecutionConfig(cache_activations=False)).
+# --------------------------------------------------------------------------
+def hidden_epoch_cached_fn(
+    layer, step_fn: Optional[Callable] = None, donate: bool = True
+) -> Callable:
+    """Jitted ``(state, xs) -> state``: one Hebbian epoch on pre-projected
+    inputs ``(n_batches, B, F_level)``."""
+    step = step_fn if step_fn is not None else (
+        lambda s, xb: layer.train_batch(s, xb)[0]
+    )
+
+    def epoch(state, xs):
+        def body(carry, xb):
+            return step(carry, xb), None
+
+        state, _ = jax.lax.scan(body, state, xs)
+        return state
+
+    return jax.jit(epoch, **_donate(donate, 0, 1))
+
+
+def readout_epoch_cached_fn(
+    layer, step_fn: Optional[Callable] = None, donate: bool = True
+) -> Callable:
+    """Jitted ``(state, hs, ys) -> state``: one supervised BCPNN-readout
+    epoch on pre-projected hidden codes."""
+    step = step_fn if step_fn is not None else (
+        lambda s, hb, yb: layer.train_batch(s, hb, yb)[0]
+    )
+
+    def epoch(state, hs, ys):
+        def body(carry, batch):
+            hb, yb = batch
+            return step(carry, hb, yb), None
+
+        state, _ = jax.lax.scan(body, state, (hs, ys))
+        return state
+
+    return jax.jit(epoch, **_donate(donate, 0, 1, 2))
+
+
+def sgd_epoch_cached_fn(opt, loss_fn: Callable, donate: bool = True) -> Callable:
+    """Jitted ``(params, opt_state, hs, ys) -> (params, opt_state, losses)``:
+    one hybrid-readout (AdamW) epoch on pre-projected hidden codes."""
+
+    def epoch(params, opt_state, hs, ys):
+        def body(carry, batch):
+            p, s = carry
+            hb, yb = batch
+            loss, g = jax.value_and_grad(loss_fn)(p, hb, yb)
+            updates, s = opt.update(g, s, p)
+            p = jax.tree_util.tree_map(lambda a, u: a + u, p, updates)
+            return (p, s), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), (hs, ys)
+        )
+        return params, opt_state, losses
+
+    return jax.jit(epoch, **_donate(donate, 0, 1, 2, 3))

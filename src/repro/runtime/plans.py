@@ -39,8 +39,12 @@ import jax.numpy as jnp
 from repro.runtime.epoch_engine import (
     epoch_sharding,
     forward_stack,
+    gather_batch,
+    hidden_epoch_cached_fn,
     hidden_epoch_fn,
+    readout_epoch_cached_fn,
     readout_epoch_fn,
+    sgd_epoch_cached_fn,
     sgd_epoch_fn,
     stack_epoch,
 )
@@ -61,6 +65,7 @@ class ExecutionPlan:
         self._hidden_cache: dict = {}
         self._hidden_step_cache: dict = {}
         self._readout_cache: Optional[Callable] = None
+        self._readout_cached: Optional[Callable] = None
         self._plastic_cls = StructuralPlasticityLayer
         self._dense_cls = DenseLayer
 
@@ -78,7 +83,12 @@ class ExecutionPlan:
     def bind_trainer(self, trainer) -> "ExecutionPlan":
         """Called by DataParallelTrainer.decorate; must precede compilation
         of any cached callable (they close over the trainer's steps)."""
-        if self._hidden_cache or self._hidden_step_cache or self._readout_cache:
+        if (
+            self._hidden_cache
+            or self._hidden_step_cache
+            or self._readout_cache
+            or self._readout_cached
+        ):
             raise RuntimeError(
                 "cannot bind a trainer to a plan that already compiled steps"
             )
@@ -105,6 +115,9 @@ class ExecutionPlan:
         return fn
 
     # ----------------------------------------------------------- interface
+    # Fused runners recompute the frozen stack inside the epoch (x is the
+    # RAW dataset); cached runners take the layer's own pre-projected input
+    # (a level-k array from the ActivationStore) — the phase-program path.
     def hidden_epoch(self, li: int) -> Callable:
         raise NotImplementedError
 
@@ -112,6 +125,15 @@ class ExecutionPlan:
         raise NotImplementedError
 
     def sgd_epoch(self, opt, loss_fn: Callable) -> Callable:
+        raise NotImplementedError
+
+    def hidden_epoch_cached(self, li: int) -> Callable:
+        raise NotImplementedError
+
+    def readout_epoch_cached(self) -> Callable:
+        raise NotImplementedError
+
+    def sgd_epoch_cached(self, opt, loss_fn: Callable) -> Callable:
         raise NotImplementedError
 
 
@@ -174,6 +196,49 @@ class ScanPlan(ExecutionPlan):
             params, opt_state, losses = epoch_fn(
                 params, opt_state, hidden_states, xs, ys
             )
+            return params, opt_state, losses[-1]
+
+        return run
+
+    # ------------------------------------------------- project-once runners
+    def hidden_epoch_cached(self, li: int) -> Callable:
+        run = self._hidden_cache.get(("cached", li))
+        if run is None:
+            layer = self.hidden_layers[li]
+            step = self.trainer.hidden_step(layer) if self.trainer else None
+            epoch_fn = hidden_epoch_cached_fn(
+                layer, step_fn=step, donate=self.donate
+            )
+
+            def run(state, xk, idx, batch_size):
+                return epoch_fn(state, self._stack(xk, idx, batch_size))
+
+            self._hidden_cache[("cached", li)] = run
+        return run
+
+    def readout_epoch_cached(self) -> Callable:
+        if self._readout_cached is None:
+            layer = self.readout_layer
+            step = self.trainer.readout_step(layer) if self.trainer else None
+            epoch_fn = readout_epoch_cached_fn(
+                layer, step_fn=step, donate=self.donate
+            )
+
+            def run(state, hk, y, idx, batch_size):
+                hs = self._stack(hk, idx, batch_size)
+                ys = self._stack(y, idx, batch_size)
+                return epoch_fn(state, hs, ys)
+
+            self._readout_cached = run
+        return self._readout_cached
+
+    def sgd_epoch_cached(self, opt, loss_fn: Callable) -> Callable:
+        epoch_fn = sgd_epoch_cached_fn(opt, loss_fn, donate=self.donate)
+
+        def run(params, opt_state, hk, y, idx, batch_size):
+            hs = self._stack(hk, idx, batch_size)
+            ys = self._stack(y, idx, batch_size)
+            params, opt_state, losses = epoch_fn(params, opt_state, hs, ys)
             return params, opt_state, losses[-1]
 
         return run
@@ -245,6 +310,61 @@ class BatchPlan(ExecutionPlan):
                 hb = below(hidden_states, jnp.asarray(x[sel]))
                 params, opt_state, loss = step(
                     params, opt_state, hb, jnp.asarray(y[sel])
+                )
+            return params, opt_state, loss
+
+        return run
+
+    # ------------------------------------------------- project-once runners
+    # The reference loop routes its per-batch gathers through the cached
+    # level-k array exactly like the scan plan routes its epoch stack — one
+    # gather per batch, no frozen forward.
+    def hidden_epoch_cached(self, li: int) -> Callable:
+        run = self._hidden_cache.get(("cached", li))
+        if run is None:
+            step = self.hidden_step(li)
+
+            def run(state, xk, idx, batch_size):
+                for b in range(0, idx.shape[0], batch_size):
+                    state = step(state, gather_batch(xk, idx[b : b + batch_size]))
+                return state
+
+            self._hidden_cache[("cached", li)] = run
+        return run
+
+    def readout_epoch_cached(self) -> Callable:
+        if self._readout_cached is None:
+            layer = self.readout_layer
+            if self.trainer is not None:
+                step = self.trainer.readout_step(layer)
+            else:
+                step = jax.jit(
+                    lambda s, hb, yb, _l=layer: _l.train_batch(s, hb, yb)[0]
+                )
+
+            def run(state, hk, y, idx, batch_size):
+                for b in range(0, idx.shape[0], batch_size):
+                    sel = idx[b : b + batch_size]
+                    state = step(state, gather_batch(hk, sel), gather_batch(y, sel))
+                return state
+
+            self._readout_cached = run
+        return self._readout_cached
+
+    def sgd_epoch_cached(self, opt, loss_fn: Callable) -> Callable:
+        @jax.jit
+        def step(p, s, hb, yb):
+            loss, g = jax.value_and_grad(loss_fn)(p, hb, yb)
+            updates, s = opt.update(g, s, p)
+            p = jax.tree_util.tree_map(lambda a, u: a + u, p, updates)
+            return p, s, loss
+
+        def run(params, opt_state, hk, y, idx, batch_size):
+            loss = jnp.zeros(())
+            for b in range(0, idx.shape[0], batch_size):
+                sel = idx[b : b + batch_size]
+                params, opt_state, loss = step(
+                    params, opt_state, gather_batch(hk, sel), gather_batch(y, sel)
                 )
             return params, opt_state, loss
 

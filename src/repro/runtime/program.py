@@ -1,0 +1,310 @@
+"""Phase programs: training as an explicit, inspectable schedule.
+
+The paper's training scheme is staged — greedy layer-by-layer Hebbian
+training, then a supervised readout on frozen representations.
+``CompiledNetwork.fit``/``partial_fit`` compile their arguments into a
+:class:`TrainProgram` — an ordered tuple of :class:`HiddenPhase`,
+:class:`BcpnnReadoutPhase`, :class:`SgdReadoutPhase` — and ONE driver
+(:func:`run_program`) executes it.  Making the schedule a value rather than
+control flow buys three things:
+
+* **per-layer epoch schedules** — ``fit(epochs_hidden=[20, 10, 5])`` gives
+  each greedy stage its own budget, which deep stacking wants (lower layers
+  need more epochs; upper layers converge on already-clustered codes);
+* **project-once execution** — each phase boundary is exactly where a layer
+  freezes, so the driver projects the dataset once through the newly-frozen
+  prefix (:class:`repro.runtime.activations.ActivationStore`) and every
+  epoch of the phase gathers from the cached level-k array instead of
+  re-running the frozen stack per batch;
+* **observability** — every history entry carries a ``seconds`` field
+  (epoch wall-time, blocked on the result) plus explicit ``project``
+  entries, so the phase-program speedup is measurable from the API.
+
+The driver is engine-agnostic: it calls the bound
+:class:`repro.runtime.plans.ExecutionPlan`'s cached epoch runners when the
+compiled network owns an ActivationStore (``ExecutionConfig(
+cache_activations=True)``, the default) and the fused runners otherwise —
+the two paths are bit-exact (``tests/test_deep_networks.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Phases and the program.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HiddenPhase:
+    """Unsupervised Hebbian epochs for hidden layer ``li`` (greedy stage)."""
+
+    li: int
+    epochs: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BcpnnReadoutPhase:
+    """Supervised BCPNN DenseLayer readout on frozen hidden codes."""
+
+    epochs: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SgdReadoutPhase:
+    """Hybrid AdamW cross-entropy readout on frozen hidden codes.
+
+    ``reset=False`` resumes the stored head/optimizer moments
+    (partial_fit's streamed-readout semantics).  ``epochs=0`` still
+    initializes the head, matching the legacy fit path.
+    """
+
+    epochs: int
+    lr: float = 1e-3
+    reset: bool = True
+
+
+Phase = Union[HiddenPhase, BcpnnReadoutPhase, SgdReadoutPhase]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainProgram:
+    """An ordered, immutable training schedule."""
+
+    phases: Tuple[Phase, ...]
+
+    @property
+    def total_epochs(self) -> int:
+        return sum(p.epochs for p in self.phases)
+
+    def describe(self) -> str:
+        """One line per phase, e.g. ``hidden0 x20 -> readout(bcpnn) x10``."""
+        parts = []
+        for p in self.phases:
+            if isinstance(p, HiddenPhase):
+                parts.append(f"hidden{p.li} x{p.epochs}")
+            elif isinstance(p, BcpnnReadoutPhase):
+                parts.append(f"readout(bcpnn) x{p.epochs}")
+            else:
+                parts.append(f"readout(sgd,lr={p.lr:g}) x{p.epochs}")
+        return " -> ".join(parts) if parts else "(empty)"
+
+
+def compile_program(
+    n_hidden: int,
+    epochs_hidden: Union[int, Sequence[int]],
+    epochs_readout: int,
+    readout: str,
+    readout_lr: float = 1e-3,
+    reset_readout: bool = True,
+) -> TrainProgram:
+    """Compile fit/partial_fit arguments into a :class:`TrainProgram`.
+
+    ``epochs_hidden`` is either one epoch count for every hidden layer or a
+    per-layer schedule (length must equal the hidden-layer count).
+    """
+    if isinstance(epochs_hidden, (int, np.integer)):
+        schedule = [int(epochs_hidden)] * n_hidden
+    else:
+        schedule = [int(e) for e in epochs_hidden]
+        if len(schedule) != n_hidden:
+            raise ValueError(
+                f"epochs_hidden schedule has {len(schedule)} entries for "
+                f"{n_hidden} hidden layers"
+            )
+    if any(e < 0 for e in schedule) or epochs_readout < 0:
+        raise ValueError("epoch counts must be non-negative")
+
+    phases: List[Phase] = [
+        HiddenPhase(li, e) for li, e in enumerate(schedule) if e > 0
+    ]
+    if readout == "bcpnn":
+        if epochs_readout > 0:
+            phases.append(BcpnnReadoutPhase(epochs_readout))
+    elif readout == "sgd":
+        # epochs=0 still initializes the head (legacy-fit semantics).
+        phases.append(
+            SgdReadoutPhase(epochs_readout, lr=readout_lr, reset=reset_readout)
+        )
+    else:
+        raise ValueError(f"Unknown readout {readout!r} (want one of ('bcpnn', 'sgd'))")
+    return TrainProgram(tuple(phases))
+
+
+class ProgramResult(NamedTuple):
+    """What the driver learned beyond the layer states it already published."""
+
+    sgd_params: Optional[dict]
+    sgd_ran: bool
+    bcpnn_trained: bool
+
+
+# --------------------------------------------------------------------------
+# The one driver.
+# --------------------------------------------------------------------------
+def run_program(
+    net,
+    program: TrainProgram,
+    x,
+    y,
+    n: int,
+    n_total: int,
+    batch_size: int,
+    shuffle: bool,
+    verbose: bool,
+    history: List[dict],
+) -> ProgramResult:
+    """Execute ``program`` against a CompiledNetwork.
+
+    Layer states are published onto ``net.state`` as each phase completes
+    (so a failure mid-program leaves only live buffers referenced); the
+    readout-head bookkeeping is returned for the caller to finalize.
+    """
+    sgd_params: Optional[dict] = None
+    sgd_ran = False
+    bcpnn_trained = False
+    for phase in program.phases:
+        if isinstance(phase, HiddenPhase):
+            _run_hidden_phase(
+                net, phase, x, n, n_total, batch_size, shuffle, verbose, history
+            )
+        elif isinstance(phase, BcpnnReadoutPhase):
+            bcpnn_trained |= _run_bcpnn_phase(
+                net, phase, x, y, n, n_total, batch_size, shuffle, verbose,
+                history,
+            )
+        else:
+            sgd_params = _run_sgd_phase(
+                net, phase, x, y, n, n_total, batch_size, shuffle, verbose,
+                history,
+            )
+            sgd_ran = True
+    return ProgramResult(sgd_params, sgd_ran, bcpnn_trained)
+
+
+def _timed(history: List[dict], entry: dict, t0: float, result) -> None:
+    """Record one history entry with its blocked wall-time."""
+    jax.block_until_ready(result)
+    entry["seconds"] = time.perf_counter() - t0
+    history.append(entry)
+
+
+def _phase_input(net, level: int, states, x, batch_size, history):
+    """The training input for a phase starting at ``level``: the cached
+    level-k projection (project-once) or the raw dataset (fused path)."""
+    store = net.activations
+    if store is None:
+        return None
+    t0 = time.perf_counter()
+    xk = store.level(level, states, x, chunk=batch_size)
+    if level > 0:
+        _timed(history, {"phase": "project", "level": level}, t0, xk)
+    return xk
+
+
+def _run_hidden_phase(
+    net, phase, x, n, n_total, batch_size, shuffle, verbose, history
+) -> None:
+    li = phase.li
+    layer = net.hidden_layers[li]
+    states = list(net.state.layers)
+    state = net._donation_safe(net.plan.place_state(layer, states[li]))
+    xk = _phase_input(net, li, states, x, batch_size, history)
+    if xk is not None:
+        run_epoch = net.plan.hidden_epoch_cached(li)
+        step = lambda st, idx: run_epoch(st, xk, idx, batch_size)  # noqa: E731
+    else:
+        run_epoch = net.plan.hidden_epoch(li)
+        below = states[:li]
+        step = lambda st, idx: run_epoch(st, below, x, idx, batch_size)  # noqa: E731
+    for epoch in range(phase.epochs):
+        t0 = time.perf_counter()
+        idx = net._epoch_indices(n, n_total, shuffle)
+        state = step(state, idx)
+        _timed(history, {"phase": f"hidden{li}", "epoch": epoch}, t0, state)
+        if verbose:
+            print(
+                f"[fit/{net.plan.name}] hidden layer {li} epoch "
+                f"{epoch + 1}/{phase.epochs}"
+            )
+    states[li] = state
+    # Publish each finished layer immediately so an exception in a later
+    # phase leaves net.state referencing only live buffers (the scan plan
+    # donates its carries on accelerators).
+    net.state = net.state._replace(layers=tuple(states))
+
+
+def _run_bcpnn_phase(
+    net, phase, x, y, n, n_total, batch_size, shuffle, verbose, history
+) -> bool:
+    layer = net.readout_layer
+    if layer is None:
+        return False
+    li = len(net.layers) - 1
+    states = list(net.state.layers)
+    state = net._donation_safe(net.plan.place_state(layer, states[li]))
+    hk = _phase_input(net, li, states, x, batch_size, history)
+    if hk is not None:
+        run_epoch = net.plan.readout_epoch_cached()
+        step = lambda st, idx: run_epoch(st, hk, y, idx, batch_size)  # noqa: E731
+    else:
+        run_epoch = net.plan.readout_epoch()
+        hidden_states = states[:li]
+        step = lambda st, idx: run_epoch(  # noqa: E731
+            st, hidden_states, x, y, idx, batch_size
+        )
+    for epoch in range(phase.epochs):
+        t0 = time.perf_counter()
+        idx = net._epoch_indices(n, n_total, shuffle)
+        state = step(state, idx)
+        _timed(history, {"phase": "readout", "epoch": epoch}, t0, state)
+        if verbose:
+            print(
+                f"[fit/{net.plan.name}] readout epoch {epoch + 1}/{phase.epochs}"
+            )
+    states[li] = state
+    net.state = net.state._replace(layers=tuple(states))
+    return True
+
+
+def _run_sgd_phase(
+    net, phase, x, y, n, n_total, batch_size, shuffle, verbose, history
+) -> dict:
+    params, opt_state, run_epoch = net._sgd_setup(y, phase.lr, phase.reset)
+    states = list(net.state.layers)
+    n_hidden = len(net.hidden_layers)
+    hk = _phase_input(net, n_hidden, states, x, batch_size, history)
+    if hk is not None:
+        step = lambda p, s, idx: run_epoch(p, s, hk, y, idx, batch_size)  # noqa: E731
+    else:
+        hidden_states = states[:n_hidden]
+        step = lambda p, s, idx: run_epoch(  # noqa: E731
+            p, s, hidden_states, x, y, idx, batch_size
+        )
+    for epoch in range(phase.epochs):
+        t0 = time.perf_counter()
+        idx = net._epoch_indices(n, n_total, shuffle)
+        params, opt_state, loss = step(params, opt_state, idx)
+        _timed(history, {"phase": "sgd_readout", "epoch": epoch}, t0, params)
+        if verbose:
+            print(
+                f"[fit/{net.plan.name}] sgd readout epoch "
+                f"{epoch + 1}/{phase.epochs} loss={float(loss):.4f}"
+            )
+    net._sgd_opt_state = opt_state
+    return params
+
+
+__all__ = [
+    "HiddenPhase",
+    "BcpnnReadoutPhase",
+    "SgdReadoutPhase",
+    "TrainProgram",
+    "ProgramResult",
+    "compile_program",
+    "run_program",
+]

@@ -127,6 +127,9 @@ class ServiceConfig:
     max_wait_s: StreamingPlan coalescing wait budget.
     max_queue:  admission control — submit() beyond this depth is rejected
                 (None = unbounded).
+    layer:      StreamingPlan's target hidden layer (deep greedy stacks can
+                stream online updates into any level, matching
+                ``compiled.streaming(layer=...)``).
     """
 
     max_batch: int = 4
@@ -137,10 +140,13 @@ class ServiceConfig:
     plan: Optional[str] = None
     max_wait_s: float = 0.0
     max_queue: Optional[int] = None
+    layer: int = 0
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.layer < 0:
+            raise ValueError(f"layer must be >= 0, got {self.layer}")
         if self.max_seq < 1:
             raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
         if self.policy not in POLICIES:
@@ -469,10 +475,10 @@ class StreamingPlan(ServePlan):
 
     name = "streaming"
 
-    def __init__(self, compiled, config: ServiceConfig, layer: int = 0):
+    def __init__(self, compiled, config: ServiceConfig, layer: Optional[int] = None):
         super().__init__(config)
         self.session = compiled.streaming(
-            layer=layer,
+            layer=config.layer if layer is None else layer,
             max_batch=config.max_batch,
             max_wait_s=config.max_wait_s,
             cache_size=config.cache_size,

@@ -169,3 +169,28 @@ class TestStackEpoch:
         x = np.zeros((10, 3), np.float32)
         with pytest.raises(ValueError, match="multiple"):
             stack_epoch(x, np.arange(10), batch_size=4)
+
+    def test_device_input_gathers_on_device(self):
+        """Regression: a device-resident input used to be forced through
+        np.ascontiguousarray (device->host->device every epoch); it now
+        gathers with jnp.take and must match the host path exactly."""
+        import jax
+
+        x = np.arange(24, dtype=np.float32).reshape(12, 2)
+        idx = np.asarray([3, 1, 4, 1, 5, 9, 2, 6])
+        host = stack_epoch(x, idx, batch_size=4)
+        dev = stack_epoch(jnp.asarray(x), idx, batch_size=4)
+        assert isinstance(dev, jax.Array)
+        np.testing.assert_array_equal(np.asarray(dev), np.asarray(host))
+
+    def test_gather_batch_device_and_host(self):
+        from repro.runtime.epoch_engine import gather_batch
+
+        x = np.arange(20, dtype=np.float32).reshape(10, 2)
+        sel = np.asarray([7, 0, 3])
+        np.testing.assert_array_equal(
+            np.asarray(gather_batch(x, sel)), x[sel]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(gather_batch(jnp.asarray(x), sel)), x[sel]
+        )
