@@ -1,0 +1,162 @@
+"""Async serving engine vs whole-queue drain under Poisson arrivals.
+
+The sync baseline is the hand-crank pattern the seed service forces:
+requests accumulate in the queue while a serving loop repeatedly calls
+``drain()`` — a request arriving during a generate waits for the WHOLE
+current queue to finish before it is even admitted.  The async engine
+admits arrivals into freed fused-decode slots mid-flight (continuous
+batching), so tail latency stops paying for queue convoys.
+
+Both paths serve identical request traffic (same prompts, same Poisson
+arrival schedule, same fused decode step); we record per-request
+end-to-end latency (submit -> completion) and aggregate throughput.
+EXPERIMENTS.md §Perf keeps the representative numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.bench_common import emit
+from repro.runtime import Request, ServiceConfig, serve_model
+
+ARCH = "gemma3-1b"
+N_REQUESTS = 16
+MAX_NEW = 24
+MAX_BATCH = 4
+MAX_SEQ = 64
+# Mean inter-arrival below the per-request service time, so requests
+# genuinely overlap: the sync drain loop then convoys arrivals behind the
+# whole current queue, which is the pathology continuous batching removes.
+MEAN_GAP_S = 0.01
+
+
+def _build():
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+
+    cfg = get_smoke_config(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _traffic(cfg, rng):
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(4, 17))
+                                ).astype(np.int32),
+            max_new_tokens=MAX_NEW,
+        )
+        for i in range(N_REQUESTS)
+    ]
+    gaps = rng.exponential(MEAN_GAP_S, N_REQUESTS)  # Poisson arrivals
+    gaps[0] = 0.0
+    return reqs, gaps
+
+
+def _warm(svc, cfg, rng):
+    """Compile prefill + fused step outside the measured window."""
+    warm = [
+        Request(rid=-1 - i,
+                prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                max_new_tokens=2)
+        for i in range(MAX_BATCH)
+    ]
+    svc.plan.generate(warm)
+
+
+def _summarize(name, lats, tokens, wall, extra=""):
+    lats_ms = np.asarray(lats) * 1e3
+    emit(f"{name}_throughput", tokens / wall, "tok/s", extra)
+    emit(f"{name}_p50_latency", float(np.percentile(lats_ms, 50)), "ms", "")
+    emit(f"{name}_p95_latency", float(np.percentile(lats_ms, 95)), "ms", "")
+    emit(f"{name}_p99_latency", float(np.percentile(lats_ms, 99)), "ms", "")
+    return float(np.percentile(lats_ms, 95)), tokens / wall
+
+
+def run_sync(cfg, model, params):
+    """Whole-queue drain loop: arrivals queue while drain() generates."""
+    svc = serve_model(
+        model, params,
+        ServiceConfig(max_batch=MAX_BATCH, max_seq=MAX_SEQ, buckets=(16,)),
+    )
+    rng = np.random.default_rng(0)
+    _warm(svc, cfg, rng)
+    reqs, gaps = _traffic(cfg, rng)
+
+    submit_t = {}
+    lats, tokens = [], 0
+    pending = list(zip(reqs, np.cumsum(gaps)))
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(pending) or svc.stats["queued"]:
+        now = time.perf_counter() - t0
+        while i < len(pending) and pending[i][1] <= now:
+            r = pending[i][0]
+            submit_t[r.rid] = time.perf_counter()
+            svc.submit(r)
+            i += 1
+        if svc.stats["queued"]:
+            for c in svc.drain():  # the whole queue decodes as one batch job
+                lats.append(time.perf_counter() - submit_t[c.rid])
+                tokens += len(c.tokens)
+        elif i < len(pending):
+            time.sleep(max(0.0, pending[i][1] - (time.perf_counter() - t0)))
+    wall = time.perf_counter() - t0
+    return _summarize("serve_sync_drain", lats, tokens, wall,
+                      f"whole-queue drain loop, {N_REQUESTS} reqs")
+
+
+def run_async(cfg, model, params):
+    """Continuous batching: arrivals land in freed slots mid-flight."""
+    svc = serve_model(
+        model, params,
+        ServiceConfig(max_batch=MAX_BATCH, max_seq=MAX_SEQ, buckets=(16,)),
+    )
+    rng = np.random.default_rng(0)
+    _warm(svc, cfg, rng)
+    reqs, gaps = _traffic(cfg, rng)
+    svc.start()
+
+    lats, done_t = [], {}
+    t0 = time.perf_counter()
+    futures = []
+    for r, gap in zip(reqs, gaps):
+        time.sleep(gap)
+        t_submit = time.perf_counter()
+        f = svc.submit(r)
+        f.add_done_callback(
+            lambda f, t=t_submit: done_t.__setitem__(
+                f.result().rid, time.perf_counter() - t
+            )
+        )
+        futures.append(f)
+    completions = [f.result() for f in futures]
+    wall = time.perf_counter() - t0
+    svc.drain_and_stop()
+    tokens = sum(len(c.tokens) for c in completions)
+    lats = [done_t[c.rid] for c in completions]
+    occ = svc.stats["mean_occupancy"]
+    return _summarize("serve_async_engine", lats, tokens, wall,
+                      f"continuous batching, occupancy={occ:.2f}")
+
+
+def main():
+    cfg, model, params = _build()
+    p95_sync, tps_sync = run_sync(cfg, model, params)
+    p95_async, tps_async = run_async(cfg, model, params)
+    emit(
+        "serve_async_p95_win",
+        p95_sync / p95_async if p95_async else 0.0,
+        "x",
+        f"p95 {p95_sync:.0f}ms -> {p95_async:.0f}ms; "
+        f"tput {tps_sync:.1f} -> {tps_async:.1f} tok/s",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@
   fig3   bench_precision         BF14..BF28 accuracy cliff
   sec4.3 bench_stl10             STL-10-scale run
   issue4 bench_deep              depth sweep: project-once vs fused phases
+  issue5 bench_serving_async     async engine vs whole-queue drain (Poisson)
   extra  bench_kernels           kernel-level roofline projections
 
 Prints ``name,value,unit,derived`` CSV rows; `python -m benchmarks.run`.
@@ -25,6 +26,7 @@ MODULES = [
     "bench_precision",
     "bench_stl10",
     "bench_deep",
+    "bench_serving_async",
     "bench_kernels",
     "bench_scaling",
 ]

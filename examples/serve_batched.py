@@ -62,6 +62,14 @@ def main():
         f"{st['fused_steps']} fused steps at mean occupancy "
         f"{st['mean_occupancy']:.2f})"
     )
+    from repro.runtime import format_latency_line
+
+    print(
+        "telemetry: "
+        + format_latency_line(
+            st["telemetry"], "queue_wait_s", "prefill_s", "decode_step_s"
+        )
+    )
 
 
 if __name__ == "__main__":

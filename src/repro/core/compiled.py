@@ -583,7 +583,13 @@ class CompiledNetwork:
         "streaming" (the latency path: wraps :meth:`streaming` with its
         coalescing buffer and state adoption).  Token decoding
         (plan="decode") belongs to the LM zoo — use
-        ``repro.runtime.service.serve_model``."""
+        ``repro.runtime.service.serve_model``.
+
+        ``ServiceConfig(async_mode=True)`` starts the dedicated executor
+        thread at bind time: ``submit()`` then returns
+        ``concurrent.futures.Future``s and batched requests aggregate
+        under the ``max_wait_s`` deadline (see
+        :mod:`repro.runtime.engine`)."""
         from repro.runtime.service import (
             BatchedPlan,
             InferenceService,
@@ -602,7 +608,10 @@ class CompiledNetwork:
                 f"CompiledNetwork.serve supports plans 'batched'/'streaming';"
                 f" {plan_name!r} serves token decoding (use serve_model)"
             )
-        return InferenceService(plan, config)
+        service = InferenceService(plan, config)
+        if config.async_mode:
+            service.start()
+        return service
 
     # ----------------------------------------------------------- checkpoint
     def save(self, directory: str, step: int = 0, retain: int = 3) -> str:

@@ -1,12 +1,16 @@
 """Production serving launcher (batched requests).
 
     python -m repro.launch.serve --arch gemma3-1b --requests 8
+    python -m repro.launch.serve --arch gemma3-1b --requests 8 --async
 
 Routes through the unified serving API: ``ServiceConfig`` binds the model
 to an ``InferenceService`` whose DecodePlan advances all decode slots in
-one fused jitted step.  ``--smoke`` (default) uses the reduced config;
-``--full`` loads the real architecture (pod-mesh scale — decode caches
-sequence-sharded per the sharding rules).
+one fused jitted step.  ``--async`` serves through the AsyncEngine
+(futures + continuous batching: requests are admitted into freed slots
+mid-flight); both modes print the latency telemetry (queue-wait /
+prefill / per-token decode percentiles).  ``--smoke`` (default) uses the
+reduced config; ``--full`` loads the real architecture (pod-mesh scale —
+decode caches sequence-sharded per the sharding rules).
 """
 from __future__ import annotations
 
@@ -18,7 +22,12 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models import build_model
-from repro.runtime import Request, ServiceConfig, serve_model
+from repro.runtime import (
+    Request,
+    ServiceConfig,
+    format_latency_line,
+    serve_model,
+)
 
 
 def main():
@@ -35,6 +44,14 @@ def main():
     ap.add_argument(
         "--policy", choices=("fcfs", "sjf"), default="fcfs",
         help="queue admission order",
+    )
+    ap.add_argument(
+        "--async", dest="async_mode", action="store_true",
+        help="serve through the AsyncEngine (futures, continuous batching)",
+    )
+    ap.add_argument(
+        "--max-queue", type=int, default=None,
+        help="bounded inbox/queue depth (backpressure)",
     )
     size = ap.add_mutually_exclusive_group()
     size.add_argument(
@@ -60,26 +77,43 @@ def main():
             max_seq=args.max_seq,
             buckets=tuple(args.buckets) if args.buckets else None,
             policy=args.policy,
+            max_queue=args.max_queue,
+            async_mode=args.async_mode,
         ),
     )
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        service.submit(
-            Request(
-                rid=i,
-                prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
-                max_new_tokens=args.max_new,
-            )
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+            max_new_tokens=args.max_new,
         )
+        for i in range(args.requests)
+    ]
     t0 = time.perf_counter()
-    done = service.drain()
+    if args.async_mode:
+        futures = [service.submit(r) for r in reqs]
+        done = [f.result() for f in futures]
+        service.drain_and_stop()
+    else:
+        for r in reqs:
+            service.submit(r)
+        done = service.drain()
     dt = time.perf_counter() - t0
     tot = sum(len(c.tokens) for c in done)
     st = service.stats
+    mode = "async" if args.async_mode else "sync"
     print(
-        f"[serve] {args.arch}: {len(done)} reqs, {tot} tokens, "
+        f"[serve/{mode}] {args.arch}: {len(done)} reqs, {tot} tokens, "
         f"{tot/dt:.1f} tok/s ({st['fused_steps']} fused steps, "
         f"mean occupancy {st['mean_occupancy']:.2f})"
+    )
+    print(
+        "[telemetry] "
+        + format_latency_line(
+            st["telemetry"], "queue_wait_s", "prefill_s", "decode_step_s",
+            "e2e_s",
+        )
     )
 
 

@@ -3,8 +3,10 @@
 # over a project-once ActivationStore), fault-tolerant training loop
 # (checkpoint/restart, stragglers, elastic restore), and the serving
 # subsystem (ServiceConfig -> InferenceService -> ServePlan: batched /
-# fused slot-batched decode / streaming).
+# fused slot-batched decode / streaming), with the async engine
+# (continuous batching + futures) and latency telemetry on top.
 from repro.runtime.activations import ActivationStore, store_for
+from repro.runtime.engine import AsyncEngine, EngineStopped, QueueFull
 from repro.runtime.epoch_engine import (
     epoch_sharding,
     gather_batch,
@@ -15,6 +17,13 @@ from repro.runtime.epoch_engine import (
     sgd_epoch_cached_fn,
     sgd_epoch_fn,
     stack_epoch,
+)
+from repro.runtime.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    ServiceMetrics,
+    format_latency_line,
 )
 from repro.runtime.plans import BatchPlan, ExecutionPlan, ScanPlan, make_plan
 from repro.runtime.program import (
@@ -30,6 +39,7 @@ from repro.runtime.service import (
     BatchedPlan,
     Completion,
     DecodePlan,
+    DecodeSession,
     InferenceService,
     Request,
     ServePlan,
@@ -43,6 +53,8 @@ from repro.runtime.train_loop import TrainLoopConfig, TrainLoopResult, train_loo
 
 __all__ = [
     "ActivationStore", "store_for",
+    "AsyncEngine", "EngineStopped", "QueueFull",
+    "Counter", "Gauge", "Histogram", "ServiceMetrics", "format_latency_line",
     "epoch_sharding", "gather_batch", "hidden_epoch_cached_fn",
     "hidden_epoch_fn", "readout_epoch_cached_fn", "readout_epoch_fn",
     "sgd_epoch_cached_fn", "sgd_epoch_fn", "stack_epoch",
@@ -50,7 +62,7 @@ __all__ = [
     "BcpnnReadoutPhase", "HiddenPhase", "SgdReadoutPhase",
     "TrainProgram", "compile_program", "run_program",
     "TrainLoopConfig", "TrainLoopResult", "train_loop",
-    "SERVE_PLANS", "BatchedPlan", "Completion", "DecodePlan",
+    "SERVE_PLANS", "BatchedPlan", "Completion", "DecodePlan", "DecodeSession",
     "InferenceService", "Request", "ServePlan", "ServiceConfig",
     "StreamingPlan", "pad_cache_like", "serve_model",
     "ServeSession",

@@ -31,6 +31,15 @@ layer, ``partial_fit`` on a new chunk, a checkpoint ``load()``, or a
 streaming session adopting state on close all publish new state objects, so
 upstream changes invalidate exactly the levels above them — no version
 counters to keep in sync.
+
+Entries are keyed ``(dataset, level)`` — the dataset anchor is the array
+object itself (the entry holds it, so its identity stays stable) — under
+ONE shared byte budget.  Alternating ``fit(train)`` / ``evaluate(test)``
+therefore caches both projections instead of thrashing one slot per level,
+and serving request batches (``BatchedPlan``) coexist with the training
+set's levels.  Device residency spills LRU to host as before; host-spilled
+bytes are themselves bounded (``host_budget_bytes``, default 4x the device
+budget) by dropping LRU host entries entirely — they are recomputable.
 """
 from __future__ import annotations
 
@@ -55,26 +64,26 @@ class _Entry:
     on_host: bool
     tick: int  # LRU clock
 
-    def valid_for(self, states: Sequence[Any], x: Any) -> bool:
-        return (
-            self.x is x
-            and len(self.states) <= len(states)
-            and all(a is b for a, b in zip(self.states, states))
+    def valid_for(self, states: Sequence[Any]) -> bool:
+        return len(self.states) <= len(states) and all(
+            a is b for a, b in zip(self.states, states)
         )
 
 
 class ActivationStore:
-    """Cached frozen-prefix projections of one dataset, keyed by level.
+    """Cached frozen-prefix projections, keyed by ``(dataset, level)``.
 
     ``level(k, states, x, chunk)`` returns the representation of ``x`` after
     the first ``k`` layers (level 0 is ``x`` itself, returned as-is).  The
-    projection starts from the deepest still-valid cached level below ``k``,
-    so a phase boundary costs one pass through only the newly-frozen layers.
+    projection starts from the deepest still-valid cached level of ``x``
+    below ``k``, so a phase boundary costs one pass through only the
+    newly-frozen layers.
 
-    One entry is kept per level; asking for a different dataset (e.g.
-    ``evaluate`` on the test set after ``fit`` on the train set) replaces the
-    stale entries rather than caching both — the serving/eval reuse of
-    multi-dataset projections is a ROADMAP follow-on.
+    Entries for several datasets coexist under the shared byte budget, so
+    alternating ``fit(train)``/``evaluate(test)`` (or serving request
+    batches) no longer thrash one slot per level; the dataset key is the
+    array object's identity, anchored by the strong reference the entry
+    itself holds.
     """
 
     def __init__(
@@ -82,11 +91,17 @@ class ActivationStore:
         layers: Sequence[Any],
         budget_bytes: int = 512 << 20,
         place: Optional[Callable] = None,
+        host_budget_bytes: Optional[int] = None,
     ):
         self.layers = list(layers)
         self.budget_bytes = int(budget_bytes)
+        self.host_budget_bytes = (
+            int(host_budget_bytes)
+            if host_budget_bytes is not None
+            else 4 * self.budget_bytes
+        )
         self._place = place  # device placement hook (trainer cache_sharding)
-        self._entries: Dict[int, _Entry] = {}
+        self._entries: Dict[Tuple[int, int], _Entry] = {}  # (id(x), level)
         self._proj_scan: Dict[Tuple[int, int], Callable] = {}
         self._proj_chunk: Dict[Tuple[int, int], Callable] = {}
         self._tick = 0
@@ -99,20 +114,24 @@ class ActivationStore:
             return x
         if not 0 < k <= len(self.layers):
             raise ValueError(f"level {k} out of range for {len(self.layers)} layers")
-        self._purge(states, x)
-        entry = self._entries.get(k)
+        self._purge(states)
+        # Each entry holds a strong reference to its dataset array, so the
+        # id() in its key stays reserved for the entry's lifetime — a key
+        # hit always means THIS x.
+        key = (id(x), k)
+        entry = self._entries.get(key)
         if entry is not None:
             self.stats["hits"] += 1
             entry.tick = self._next_tick()
             return entry.value
+        # Deepest still-cached level of THIS dataset below k.
         base, j = x, 0
-        for lvl in sorted(self._entries, reverse=True):
-            if lvl < k:
-                base, j = self._entries[lvl].value, lvl
-                break
+        for (aid, lvl), e in self._entries.items():
+            if aid == id(x) and j < lvl < k:
+                base, j = e.value, lvl
         value = self._project(base, j, k, states, chunk)
-        self._insert(k, value, states, x)
-        return self._entries[k].value
+        self._insert(key, value, states, x)
+        return self._entries[key].value
 
     def invalidate(self) -> None:
         """Drop every cached level (e.g. before freeing the network)."""
@@ -122,11 +141,28 @@ class ActivationStore:
     def device_bytes(self) -> int:
         return sum(e.nbytes for e in self._entries.values() if not e.on_host)
 
-    def resident(self, k: int) -> Optional[str]:
-        """'device' / 'host' for a cached level, None when not cached."""
-        e = self._entries.get(k)
-        if e is None:
+    @property
+    def host_bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values() if e.on_host)
+
+    @property
+    def datasets(self) -> int:
+        """Distinct dataset anchors currently cached."""
+        return len({aid for aid, _ in self._entries})
+
+    def resident(self, k: int, x=None) -> Optional[str]:
+        """'device' / 'host' for a cached level, None when not cached.
+        With ``x`` given, answers for that dataset's entry; without, for
+        the most-recently-used entry at level ``k``."""
+        if x is not None:
+            e = self._entries.get((id(x), k))
+            if e is None:
+                return None
+            return "host" if e.on_host else "device"
+        hits = [e for (_, lvl), e in self._entries.items() if lvl == k]
+        if not hits:
             return None
+        e = max(hits, key=lambda e: e.tick)
         return "host" if e.on_host else "device"
 
     # -------------------------------------------------------------- plumbing
@@ -134,10 +170,11 @@ class ActivationStore:
         self._tick += 1
         return self._tick
 
-    def _purge(self, states: Sequence[Any], x) -> None:
-        """Drop entries invalidated by upstream state changes or a new
-        dataset, so stale entries never pin superseded buffers."""
-        stale = [k for k, e in self._entries.items() if not e.valid_for(states, x)]
+    def _purge(self, states: Sequence[Any]) -> None:
+        """Drop entries invalidated by upstream state changes — for EVERY
+        cached dataset (all project through the same frozen states) — so
+        stale entries never pin superseded buffers."""
+        stale = [k for k, e in self._entries.items() if not e.valid_for(states)]
         for k in stale:
             del self._entries[k]
             self.stats["evictions"] += 1
@@ -200,21 +237,22 @@ class ActivationStore:
             self._proj_chunk[(j, k)] = fn
         return fn
 
-    def _insert(self, k: int, value, states: Sequence[Any], x) -> None:
+    def _insert(self, key: Tuple[int, int], value, states: Sequence[Any], x) -> None:
+        k = key[1]
         nbytes = int(value.nbytes)
         on_host = nbytes > self.budget_bytes
         if not on_host:
             # Spill least-recently-used device levels until this one fits.
             while self.device_bytes + nbytes > self.budget_bytes:
                 victims = [
-                    (e.tick, lvl)
-                    for lvl, e in self._entries.items()
+                    (e.tick, vk)
+                    for vk, e in self._entries.items()
                     if not e.on_host
                 ]
                 if not victims:
                     break
-                _, lvl = min(victims)
-                entry = self._entries[lvl]
+                _, vk = min(victims)
+                entry = self._entries[vk]
                 entry.value = np.asarray(entry.value)
                 entry.on_host = True
                 self.stats["spills"] += 1
@@ -225,7 +263,7 @@ class ActivationStore:
             value = jnp.asarray(value)
             if self._place is not None:
                 value = self._place(value)
-        self._entries[k] = _Entry(
+        self._entries[key] = _Entry(
             value=value,
             states=tuple(states[:k]),
             x=x,
@@ -233,6 +271,20 @@ class ActivationStore:
             on_host=on_host,
             tick=self._next_tick(),
         )
+        # Host-spilled bytes are bounded too (they are recomputable): drop
+        # LRU host entries beyond the host budget — multi-dataset serving
+        # traffic must not grow host memory without limit.
+        while self.host_bytes > self.host_budget_bytes:
+            victims = [
+                (e.tick, vk)
+                for vk, e in self._entries.items()
+                if e.on_host and vk != key
+            ]
+            if not victims:
+                break  # only the just-inserted entry remains; keep it
+            _, vk = min(victims)
+            del self._entries[vk]
+            self.stats["evictions"] += 1
 
 
 def store_for(layers: Sequence[Any], config, trainer=None) -> "ActivationStore":

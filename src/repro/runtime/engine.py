@@ -1,0 +1,367 @@
+"""Async serving engine: continuous batching, futures, backpressure.
+
+The synchronous :class:`~repro.runtime.service.InferenceService` path is a
+hand-crank: callers ``submit()`` into a deque and block on ``drain()``,
+decode slots refill only from the list collected at ``generate()`` entry,
+and ``max_wait_s`` means nothing outside the streaming plan.  The BCPNN
+follow-up line (stream-based FPGA inference, online-learning-to-inference)
+treats the network as a continuously-fed stream — so this module gives
+every :class:`~repro.runtime.service.ServePlan` a real serving runtime:
+
+* ``AsyncEngine(plan, config)`` owns device execution on ONE dedicated
+  executor thread (jit calls never run on caller threads; no cross-thread
+  trace races).  ``submit(item)`` returns a ``concurrent.futures.Future``.
+* **Continuous batching (DecodePlan):** the loop admits new requests into
+  free fused-decode slots *between* jitted steps — a request submitted
+  while others are mid-generation lands in the next freed slot, instead of
+  waiting for the whole queue to drain.  The loop drives the SAME
+  :class:`~repro.runtime.service.DecodeSession` admit/evict/step schedule
+  as the synchronous ``generate()``, so under deterministic arrivals the
+  two are token-identical (asserted in tests).
+* **Deadline micro-batching (BatchedPlan):** requests aggregate until
+  ``max_batch`` is reached or ``max_wait_s`` has elapsed since the batch
+  opened — the latency/throughput knob the config always promised.
+* **Backpressure:** the inbox is bounded by ``max_queue`` (the same knob
+  the sync queue uses); a submit beyond it raises :class:`QueueFull` and
+  counts into ``metrics.rejected``.
+* **Graceful shutdown:** ``drain_and_stop()`` rejects new submits
+  (:class:`EngineStopped`), completes everything in flight and queued,
+  then joins the thread — no Future is ever dropped (a loop crash fails
+  the remaining futures rather than abandoning them).
+
+Latency telemetry (queue-wait, prefill, per-token decode, end-to-end)
+records into the plan's shared :class:`~repro.runtime.metrics.ServiceMetrics`
+bundle, surfaced via ``service.stats["telemetry"]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import Any, Deque, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["AsyncEngine", "QueueFull", "EngineStopped"]
+
+
+class QueueFull(RuntimeError):
+    """submit() bounced off the bounded inbox (``max_queue``)."""
+
+
+class EngineStopped(RuntimeError):
+    """submit() after drain_and_stop() began."""
+
+
+@dataclasses.dataclass
+class _Work:
+    item: Any
+    future: Future
+    t_submit: float
+    tag: int
+
+
+class AsyncEngine:
+    """One executor thread turning a ServePlan into a continuous service.
+
+    States: ``new`` (constructed; submits queue up) -> ``running`` (loop
+    live) -> ``draining`` (no new submits; finishing queued + in-flight)
+    -> ``stopped``.
+    """
+
+    _POLL_S = 0.05  # idle wakeup so state changes are never missed
+
+    def __init__(self, plan, config, metrics=None):
+        self.plan = plan
+        self.config = config
+        self.metrics = metrics if metrics is not None else plan.metrics
+        self._inbox: Deque[_Work] = deque()
+        self._cv = threading.Condition()
+        self._state = "new"
+        self._thread: Optional[threading.Thread] = None
+        self._next_tag = 0
+        # Engine-level counters (plan/latency stats live in self.metrics).
+        self.admitted = 0  # decode requests placed into slots
+        self.batches = 0  # batched micro-batches dispatched
+
+    # ---------------------------------------------------------------- state
+    @property
+    def state(self) -> str:
+        with self._cv:
+            return self._state
+
+    @property
+    def stopped(self) -> bool:
+        return self.state == "stopped"
+
+    @property
+    def inbox_depth(self) -> int:
+        with self._cv:
+            return len(self._inbox)
+
+    @property
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "state": self.state,
+            "inbox": self.inbox_depth,
+            "admitted": self.admitted,
+            "batches": self.batches,
+        }
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "AsyncEngine":
+        """Start the executor thread (idempotent while running)."""
+        with self._cv:
+            if self._state == "running":
+                return self
+            if self._state in ("draining", "stopped"):
+                raise RuntimeError(f"cannot start a {self._state} engine")
+            self._state = "running"
+            self._thread = threading.Thread(
+                target=self._run, name="repro-serve-engine", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def submit(self, item) -> Future:
+        """Queue one work item; the Future resolves to its result (a
+        Completion for decode, a score row for batched, scores for
+        streaming infer).  Raises :class:`QueueFull` on backpressure and
+        :class:`EngineStopped` once draining has begun."""
+        with self._cv:
+            if self._state in ("draining", "stopped"):
+                self.metrics.rejected.inc()
+                raise EngineStopped(
+                    "engine is draining/stopped; new submits are rejected"
+                )
+            if (
+                self.config.max_queue is not None
+                and len(self._inbox) >= self.config.max_queue
+            ):
+                self.metrics.rejected.inc()
+                raise QueueFull(
+                    f"engine inbox at max_queue={self.config.max_queue}"
+                )
+            fut: Future = Future()
+            self._inbox.append(
+                _Work(item, fut, time.perf_counter(), self._next_tag)
+            )
+            self._next_tag += 1
+            self.metrics.submitted.inc()
+            self.metrics.queue_depth.set(len(self._inbox))
+            self._cv.notify_all()
+        return fut
+
+    def drain_and_stop(self, timeout: Optional[float] = None) -> None:
+        """Reject new submits, finish queued + in-flight work, stop.
+        Raises ``TimeoutError`` (leaving the engine ``draining``) if the
+        loop is still working when ``timeout`` expires — the engine is NOT
+        marked stopped while its thread may still drive the plan."""
+        with self._cv:
+            if self._state == "stopped":
+                return
+            if self._state == "new":
+                # Work queued before start(): run it to completion rather
+                # than dropping futures on the floor.
+                self._state = "running"
+                self._thread = threading.Thread(
+                    target=self._run, name="repro-serve-engine", daemon=True
+                )
+                self._thread.start()
+            self._state = "draining"
+            self._cv.notify_all()
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                f"engine still draining after {timeout}s; retry "
+                "drain_and_stop() — a second engine must not bind while "
+                "this thread drives the plan"
+            )
+        with self._cv:
+            self._state = "stopped"
+            self.metrics.queue_depth.set(0)
+
+    # ------------------------------------------------------------ main loop
+    @staticmethod
+    def _crash_exc(message: str, cause: Optional[BaseException]) -> EngineStopped:
+        """EngineStopped carrying the loop's causal exception, so
+        ``future.result()`` callers see WHY, not just that it died."""
+        exc = EngineStopped(
+            f"{message}: {cause!r}" if cause is not None else message
+        )
+        exc.__cause__ = cause
+        return exc
+
+    def _run(self) -> None:
+        cause: Optional[BaseException] = None
+        try:
+            if self.plan.name == "decode":
+                self._loop_decode()
+            elif self.plan.name == "batched":
+                self._loop_batched()
+            else:
+                self._loop_streaming()
+        except BaseException as e:
+            cause = e
+            raise
+        finally:
+            # A crashed loop must not strand futures or keep accepting
+            # work: mark the engine stopped (submit() then raises
+            # EngineStopped) and fail whatever is left queued.
+            with self._cv:
+                self._state = "stopped"
+                leftover = list(self._inbox)
+                self._inbox.clear()
+            for w in leftover:
+                self._fail(
+                    w,
+                    self._crash_exc("engine loop exited with work queued", cause),
+                )
+
+    def _claim(self, work: _Work) -> bool:
+        """Transition a dequeued future to running; False when the caller
+        cancelled it while it waited (skip the work, don't serve it)."""
+        return work.future.set_running_or_notify_cancel()
+
+    def _complete(self, work: _Work, result) -> None:
+        work.future.set_result(result)
+        self.metrics.completed.inc()
+        self.metrics.e2e_s.observe(time.perf_counter() - work.t_submit)
+
+    @staticmethod
+    def _fail(work: _Work, exc: BaseException) -> None:
+        """set_exception that tolerates caller-cancelled futures."""
+        if work.future.cancelled() or work.future.done():
+            return
+        if work.future.running() or work.future.set_running_or_notify_cancel():
+            work.future.set_exception(exc)
+
+    # ----------------------------------------------------- decode (tentpole)
+    def _pop_next_decode(self) -> _Work:
+        """Next request under the configured policy (caller holds _cv)."""
+        if self.config.policy == "sjf":
+            i = min(
+                range(len(self._inbox)),
+                key=lambda j: len(self._inbox[j].item.prompt),
+            )
+            w = self._inbox[i]
+            del self._inbox[i]
+            return w
+        return self._inbox.popleft()
+
+    def _loop_decode(self) -> None:
+        """Continuous batching: admission happens between jitted steps, so
+        a request submitted mid-flight lands in the next freed slot."""
+        sess = self.plan.session()
+        inflight: Dict[int, _Work] = {}  # tag -> work
+        try:
+            while True:
+                # Pop as many queued requests as there are free slots
+                # (under the lock), then prefill/admit outside it — prefill
+                # can compile, and submitters must not block behind a trace.
+                popped: List[_Work] = []
+                with self._cv:
+                    while (
+                        not self._inbox
+                        and not sess.has_active()
+                        and self._state == "running"
+                    ):
+                        self._cv.wait(self._POLL_S)
+                    if (
+                        not self._inbox
+                        and not sess.has_active()
+                        and self._state != "running"
+                    ):
+                        break
+                    n_free = sess.free_slots()
+                    while self._inbox and len(popped) < n_free:
+                        popped.append(self._pop_next_decode())
+                    self.metrics.queue_depth.set(len(self._inbox))
+                now = time.perf_counter()
+                for w in popped:
+                    if not self._claim(w):
+                        continue  # caller cancelled while queued
+                    self.metrics.queue_wait_s.observe(now - w.t_submit)
+                    try:
+                        sess.admit(w.item, tag=w.tag)
+                        inflight[w.tag] = w
+                        self.admitted += 1
+                    except Exception as e:  # noqa: BLE001 — per-request failure
+                        w.future.set_exception(e)
+                if sess.has_active():
+                    for tag, completion in sess.step():
+                        self._complete(inflight.pop(tag), completion)
+        except BaseException as e:
+            # A crashed step must not strand admitted requests' futures —
+            # and their waiters deserve the real cause, not a generic stop.
+            for w in inflight.values():
+                self._fail(
+                    w,
+                    self._crash_exc(
+                        "engine loop crashed with requests in flight", e
+                    ),
+                )
+            raise
+
+    # ------------------------------------------------- batched (micro-batch)
+    def _loop_batched(self) -> None:
+        """Deadline-driven micro-batching: a batch opens at the first
+        dequeued item and dispatches when it reaches ``max_batch`` or
+        ``max_wait_s`` after opening — partial batches fly rather than
+        waiting forever."""
+        cfg = self.config
+        while True:
+            batch: List[_Work] = []
+            with self._cv:
+                while not self._inbox and self._state == "running":
+                    self._cv.wait(self._POLL_S)
+                if not self._inbox and self._state != "running":
+                    break
+                batch.append(self._inbox.popleft())
+                deadline = time.perf_counter() + cfg.max_wait_s
+                while len(batch) < cfg.max_batch:
+                    if self._inbox:
+                        batch.append(self._inbox.popleft())
+                        continue
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0 or self._state != "running":
+                        break
+                    self._cv.wait(remaining)
+                self.metrics.queue_depth.set(len(self._inbox))
+            batch = [w for w in batch if self._claim(w)]  # drop cancelled
+            if not batch:
+                continue
+            now = time.perf_counter()
+            for w in batch:
+                self.metrics.queue_wait_s.observe(now - w.t_submit)
+            try:
+                x = np.stack([np.asarray(w.item) for w in batch])
+                scores = np.asarray(self.plan.predict(x))
+                self.batches += 1
+                for i, w in enumerate(batch):
+                    self._complete(w, scores[i])
+            except Exception as e:  # noqa: BLE001 — fail the whole batch
+                for w in batch:
+                    w.future.set_exception(e)
+
+    # -------------------------------------------------- streaming (latency)
+    def _loop_streaming(self) -> None:
+        """Per-item inference through the streaming session — the lowest
+        latency path; coalesced training feeds stay on the sync surface."""
+        while True:
+            with self._cv:
+                while not self._inbox and self._state == "running":
+                    self._cv.wait(self._POLL_S)
+                if not self._inbox and self._state != "running":
+                    break
+                w = self._inbox.popleft()
+                self.metrics.queue_depth.set(len(self._inbox))
+            if not self._claim(w):
+                continue  # caller cancelled while queued
+            self.metrics.queue_wait_s.observe(time.perf_counter() - w.t_submit)
+            try:
+                self._complete(w, self.plan.infer(np.asarray(w.item)))
+            except Exception as e:  # noqa: BLE001 — per-item failure
+                w.future.set_exception(e)

@@ -1,0 +1,207 @@
+"""Serving telemetry: monotonic counters, gauges, percentile histograms.
+
+The serving subsystem (sync ``InferenceService`` drains and the
+:mod:`repro.runtime.engine` async loops) records where every request's
+wall-time goes — queue wait, prefill, per-token decode, micro-batch
+execution — into one :class:`ServiceMetrics` bundle shared by the plan,
+the service front door, and the engine.  ``service.stats["telemetry"]``
+(and the ``launch/serve.py`` CLI) surface the snapshot.
+
+Design constraints, in order:
+
+* **Cheap on the hot path.**  ``observe()`` is an append into a fixed-size
+  ring plus two scalar updates under a lock — no sorting, no allocation
+  growth.  Percentiles are computed only when a snapshot is asked for.
+* **Thread-safe.**  Async submitters hammer ``Counter.inc`` and the engine
+  thread records latencies concurrently; every instrument takes its own
+  lock (no global registry lock).
+* **Bounded memory.**  Histograms keep the last ``window`` observations
+  (default 2048); ``count``/``sum`` stay exact over the full lifetime, so
+  throughput math never loses events while percentile estimates track
+  *recent* behavior — which is what a latency SLO wants anyway.
+
+Percentiles use numpy's default linear interpolation over the retained
+window, so ``Histogram.percentile(p)`` equals ``np.percentile(window, p)``
+exactly (asserted in tests).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Sequence
+
+import numpy as np
+
+
+class Counter:
+    """A monotonic event counter."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._value = 0
+
+    def inc(self, n: int = 1) -> None:
+        if n < 0:
+            raise ValueError(f"Counter.inc must be monotonic, got {n}")
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        with self._lock:
+            return self._value
+
+
+class Gauge:
+    """A point-in-time value (queue depth, active slots)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    def add(self, dv: float) -> None:
+        with self._lock:
+            self._value += float(dv)
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Histogram:
+    """Windowed latency histogram with exact-over-window percentiles.
+
+    The last ``window`` observations live in a preallocated ring;
+    ``count``/``sum``/``max`` are exact over every observation ever made.
+    """
+
+    def __init__(self, window: int = 2048) -> None:
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self._lock = threading.Lock()
+        self._ring = np.empty(window, np.float64)
+        self._window = window
+        self._n = 0  # lifetime observation count
+        self._sum = 0.0
+        self._max = 0.0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self._ring[self._n % self._window] = v
+            self._n += 1
+            self._sum += v
+            if v > self._max:
+                self._max = v
+
+    def _window_values(self) -> np.ndarray:
+        return self._ring[: min(self._n, self._window)].copy()
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._n
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def percentile(self, p: float) -> float:
+        """``np.percentile`` (linear interpolation) over the retained
+        window; 0.0 before any observation."""
+        with self._lock:
+            vals = self._window_values()
+        if vals.size == 0:
+            return 0.0
+        return float(np.percentile(vals, p))
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            vals = self._window_values()
+            n, s, mx = self._n, self._sum, self._max
+        if vals.size == 0:
+            return {"count": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0,
+                    "p99": 0.0, "max": 0.0}
+        p50, p95, p99 = (float(x) for x in np.percentile(vals, (50, 95, 99)))
+        return {
+            "count": n,
+            "mean": s / n,
+            "p50": p50,
+            "p95": p95,
+            "p99": p99,
+            "max": mx,
+        }
+
+
+class ServiceMetrics:
+    """The per-service telemetry bundle, shared by plan + service + engine.
+
+    Counters
+      ``submitted`` / ``completed`` / ``rejected``: request lifecycle.
+    Gauges
+      ``queue_depth``: items waiting (sync queue + engine inbox).
+    Histograms (seconds)
+      ``queue_wait_s``:  submit -> admission (decode) / batch formation
+                         (batched) / drain start (sync path).
+      ``prefill_s``:     per-request prompt prefill (decode plans).
+      ``decode_step_s``: one fused decode step == one token per active
+                         request (inter-token latency).
+      ``batch_s``:       one padded micro-batch forward (batched plans).
+      ``e2e_s``:         submit -> completion, the caller-visible latency.
+    """
+
+    HISTOGRAMS: Sequence[str] = (
+        "queue_wait_s", "prefill_s", "decode_step_s", "batch_s", "e2e_s",
+    )
+
+    def __init__(self, window: int = 2048) -> None:
+        self.submitted = Counter()
+        self.completed = Counter()
+        self.rejected = Counter()
+        self.queue_depth = Gauge()
+        for name in self.HISTOGRAMS:
+            setattr(self, name, Histogram(window))
+
+    def hist(self, name: str) -> Histogram:
+        return getattr(self, name)
+
+    def snapshot(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "submitted": self.submitted.value,
+            "completed": self.completed.value,
+            "rejected": self.rejected.value,
+            "queue_depth": self.queue_depth.value,
+        }
+        for name in self.HISTOGRAMS:
+            out[name] = self.hist(name).snapshot()
+        return out
+
+
+def format_latency_line(snapshot: Dict[str, Any], *names: str) -> str:
+    """One CLI-friendly line: ``queue_wait p50=1.2ms p95=3.4ms p99=5.6ms``
+    per requested histogram (skipping empty ones)."""
+    parts = []
+    for name in names or ServiceMetrics.HISTOGRAMS:
+        h = snapshot.get(name)
+        if not h or not h.get("count"):
+            continue
+        label = name[:-2] if name.endswith("_s") else name
+        parts.append(
+            f"{label} p50={h['p50'] * 1e3:.2f}ms p95={h['p95'] * 1e3:.2f}ms "
+            f"p99={h['p99'] * 1e3:.2f}ms"
+        )
+    return " | ".join(parts) if parts else "no latency samples"
+
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "ServiceMetrics",
+    "format_latency_line",
+]

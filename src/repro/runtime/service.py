@@ -14,16 +14,25 @@ one :class:`ServePlan` via::
 Three strategies, analogous to ScanPlan/BatchPlan on the training side:
 
 * :class:`BatchedPlan` — BCPNN classification through the compiled network's
-  *shared* jitted forward (the same callable ``compiled.predict`` uses), with
-  padding-bucket selection on the batch axis so a service facing arbitrary
-  request sizes compiles a bounded number of shapes.  Zero-padding rows never
-  changes real outputs (the forward is row-independent; property-tested).
+  *shared* jitted level-H projection and readout head (the same
+  ``build_head`` definition ``compiled.predict`` uses), with padding-bucket
+  selection on the batch axis so a service facing arbitrary request sizes
+  compiles a bounded number of shapes.  With the activation store enabled,
+  repeated request batches hit the cached projection (content-addressed
+  canonicalization) and pay only the head; the fused full-stack forward
+  survives as the ``cache_activations=False`` fallback.  Zero-padding rows
+  never change real outputs (the forward is row-independent;
+  property-tested).
 * :class:`DecodePlan` — prefill + continuous slot-batched decode for the LM
   zoo.  The hot path is ONE jitted, shape-stable step over a fused slot axis:
   per-slot ``(1, ...)`` caches live stacked in a single ``(max_batch, ...)``
   pytree and every active slot advances through one ``vmap``'d
   ``decode_step`` with per-slot positions — no per-slot Python-loop dispatch
   (the seed ``ServeSession`` paid one jit call per slot per token).
+  The admit/evict/step machinery lives in :class:`DecodeSession`, which
+  both the synchronous ``generate()`` loop and the async engine
+  (:mod:`repro.runtime.engine`) drive — ONE slot schedule, so the two
+  surfaces are token-identical under deterministic arrivals.
   Prompt-length padding buckets bound prefill traces for attention families;
   prefill gathers last-position logits at the *true* prompt end
   (``last_pos``), so bucketing is token-exact.  SSM/hybrid state caches are
@@ -36,9 +45,18 @@ Three strategies, analogous to ScanPlan/BatchPlan on the training side:
 
 :class:`InferenceService` owns the request queue (admission control via
 ``max_queue``, ordering via ``policy``: "fcfs" arrival order or "sjf"
-shortest-prompt-first) and delegates execution to its plan.  Slot
-admission/eviction — free slot -> prefill -> decode -> EOS/limit -> refill —
-lives inside DecodePlan, at step granularity (continuous batching).
+shortest-prompt-first — decode plans only; other plans reject it at bind
+time) and delegates execution to its plan.  Slot admission/eviction — free
+slot -> prefill -> decode -> EOS/limit -> refill — lives inside
+DecodeSession, at step granularity (continuous batching).
+
+``service.start()`` (or ``ServiceConfig(async_mode=True)``) hands the queue
+to a dedicated executor thread: ``submit()`` then returns a
+``concurrent.futures.Future`` and new requests are admitted into freed
+decode slots *mid-flight*, between jitted steps — see
+:mod:`repro.runtime.engine`.  Every plan records latency telemetry
+(queue-wait / prefill / per-token decode histograms,
+:mod:`repro.runtime.metrics`) surfaced via ``service.stats["telemetry"]``.
 
 ``pad_cache_like`` is the structural replacement for the seed's name-list
 cache-padding heuristic: every leaf grows to its template shape (from
@@ -48,7 +66,9 @@ hybrid ssm+kv, enc-dec cross kv) pad correctly without name registration.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import hashlib
+import time
+from collections import OrderedDict, deque
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
@@ -56,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.streaming import _LRUCells
+from repro.runtime.metrics import ServiceMetrics
 
 POLICIES = ("fcfs", "sjf")
 
@@ -118,18 +139,26 @@ class ServiceConfig:
                 prefill, batch sizes for BatchedPlan predict.  None = exact
                 shapes (jit traces per distinct size, LRU-bounded).
     policy:     queue admission order: "fcfs" (arrival) or "sjf"
-                (shortest-prompt-first).
+                (shortest-prompt-first; decode plans only).
     cache_size: LRU bound on per-shape jitted callables (prefill cells /
                 streaming cells).
     plan:       "batched" | "decode" | "streaming"; None lets the entry
                 point pick its default (serve() -> batched, serve_model()
                 -> decode).
-    max_wait_s: StreamingPlan coalescing wait budget.
+    max_wait_s: micro-batch aggregation deadline: the async engine (and
+                StreamingPlan's coalescing buffer) waits at most this long
+                to fill ``max_batch`` before dispatching a partial batch.
     max_queue:  admission control — submit() beyond this depth is rejected
-                (None = unbounded).
+                (None = unbounded).  The async engine's inbox is bounded by
+                the same knob (backpressure).
     layer:      StreamingPlan's target hidden layer (deep greedy stacks can
                 stream online updates into any level, matching
                 ``compiled.streaming(layer=...)``).
+    async_mode: start the dedicated executor thread at bind time —
+                ``submit()`` returns a ``Future`` and decode slots admit
+                new requests mid-flight (continuous batching).  For
+                streaming plans the async surface serves per-item
+                INFERENCE (sync submit+drain feeds training samples).
     """
 
     max_batch: int = 4
@@ -141,6 +170,7 @@ class ServiceConfig:
     max_wait_s: float = 0.0
     max_queue: Optional[int] = None
     layer: int = 0
+    async_mode: bool = False
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -161,6 +191,8 @@ class ServiceConfig:
             )
         if self.max_queue is not None and self.max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {self.max_wait_s}")
         if self.buckets is not None:
             b = tuple(int(x) for x in self.buckets)
             if not b or any(x <= 0 for x in b) or list(b) != sorted(set(b)):
@@ -182,12 +214,16 @@ class ServiceConfig:
 # ------------------------------------------------------------------- plans
 class ServePlan:
     """Base serving strategy.  Subclasses implement the capability they
-    serve; calling an unsupported capability raises with the plan name."""
+    serve; calling an unsupported capability raises with the plan name.
+    Every plan owns a :class:`ServiceMetrics` bundle (shared with the
+    service front door and the async engine)."""
 
     name: str = "?"
 
-    def __init__(self, config: ServiceConfig):
+    def __init__(self, config: ServiceConfig,
+                 metrics: Optional[ServiceMetrics] = None):
         self.config = config
+        self.metrics = metrics if metrics is not None else ServiceMetrics()
 
     def _unsupported(self, what: str):
         raise NotImplementedError(
@@ -219,34 +255,85 @@ class ServePlan:
 
 
 class BatchedPlan(ServePlan):
-    """BCPNN classification through the compiled network's shared forward.
+    """BCPNN classification through the compiled network's shared head.
 
     ``predict`` chunks the input along the batch axis (chunk cap =
     ``max_batch`` or the largest bucket), pads each chunk up to its bucket
-    with zero rows, runs the SAME jitted forward ``compiled.predict`` uses,
-    and slices the pad off — identical outputs, bounded trace count."""
+    with zero rows, and — when the compiled network's activation store is
+    on — projects it through the SAME jitted frozen-stack projection
+    ``compiled.predict``/``evaluate`` use, then applies the ONE shared
+    ``build_head`` definition.  Padded chunks are content-canonicalized
+    (a small LRU maps chunk bytes -> one anchor array), so repeated
+    request batches hit the store's cached level-H projection and pay only
+    the readout head.  Without the store (``cache_activations=False``) the
+    fused full-network forward runs instead — identical outputs either
+    way, bounded trace count."""
 
     name = "batched"
 
-    def __init__(self, compiled, config: ServiceConfig):
-        super().__init__(config)
+    _CANON_CAPACITY = 32  # distinct padded chunks remembered for reuse
+
+    def __init__(self, compiled, config: ServiceConfig,
+                 metrics: Optional[ServiceMetrics] = None):
+        super().__init__(config, metrics)
         self.compiled = compiled
-        self._fwd = compiled._forward_fn()  # shared forward cache
+        self._fwd = compiled._forward_fn()  # shared forward (fused fallback)
         self._requests = 0
         self._rows = 0
         self._padded_rows = 0
+        # Content-addressed canonicalization: digest -> the first array
+        # object seen with those bytes.  The activation store anchors cache
+        # validity on array identity, so resubmitted batches must map onto
+        # ONE object to hit its projection.
+        self._canon: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
+        self._reuse_hits = 0
 
     def _chunk_cap(self) -> int:
         if self.config.buckets is not None:
             return self.config.buckets[-1]
         return self.config.max_batch
 
+    def _canonical(self, xb: np.ndarray) -> np.ndarray:
+        key = (
+            xb.shape,
+            str(xb.dtype),
+            hashlib.blake2b(np.ascontiguousarray(xb).tobytes(),
+                            digest_size=16).digest(),
+        )
+        hit = self._canon.get(key)
+        if hit is not None:
+            self._canon.move_to_end(key)
+            self._reuse_hits += 1
+            return hit
+        # Anchor a PRIVATE copy, never a view of the caller's array: the
+        # digest->anchor mapping (and the store's identity-keyed projection)
+        # must survive the caller mutating their buffer in place.
+        anchor = np.array(xb, copy=True)
+        self._canon[key] = anchor
+        while len(self._canon) > self._CANON_CAPACITY:
+            self._canon.popitem(last=False)
+        return anchor
+
+    def _scores(self, xb: np.ndarray) -> jnp.ndarray:
+        """One padded chunk -> class scores, through the shared head."""
+        compiled = self.compiled
+        state = compiled.state
+        if compiled.activations is not None and compiled.hidden_layers:
+            xb = self._canonical(xb)
+            n_hidden = len(compiled.hidden_layers)
+            h = compiled.activations.level(
+                n_hidden, list(state.layers), xb, chunk=xb.shape[0]
+            )
+            return compiled._head_fn()(
+                state.layers, state.readout, jnp.asarray(h)
+            )
+        return self._fwd(state.layers, state.readout, jnp.asarray(xb))
+
     def predict(self, x) -> jnp.ndarray:
         x = np.asarray(x)
         if x.ndim == 1:
             x = x[None, :]
         cap = self._chunk_cap()
-        state = self.compiled.state
         outs = []
         for i in range(0, x.shape[0], cap):
             xb = x[i : i + cap]
@@ -257,7 +344,9 @@ class BatchedPlan(ServePlan):
                     [xb, np.zeros((m - n,) + xb.shape[1:], xb.dtype)], axis=0
                 )
                 self._padded_rows += m - n
-            scores = self._fwd(state.layers, state.readout, jnp.asarray(xb))
+            t0 = time.perf_counter()
+            scores = jax.block_until_ready(self._scores(xb))
+            self.metrics.batch_s.observe(time.perf_counter() - t0)
             outs.append(scores[:n])
             self._rows += n
         self._requests += 1
@@ -269,7 +358,124 @@ class BatchedPlan(ServePlan):
             "requests": self._requests,
             "rows": self._rows,
             "padded_rows": self._padded_rows,
+            "projection_reuse_hits": self._reuse_hits,
         }
+
+
+class DecodeSession:
+    """Mutable slot state for one continuously-batched decode run.
+
+    The admit / evict / fused-step cycle lives HERE, so the synchronous
+    whole-queue ``DecodePlan.generate`` and the async engine's mid-flight
+    admission loop drive literally the same schedule: admission fills free
+    slots in slot order, eviction retires finished slots, and one jitted
+    dispatch advances every active slot.  ``tag`` is an opaque caller
+    handle (the engine keys futures on it); completions come back as
+    ``(tag, Completion)`` pairs."""
+
+    def __init__(self, plan: "DecodePlan"):
+        self.plan = plan
+        S = plan.config.max_batch
+        self.S = S
+        self.active: List[Optional[Dict]] = [None] * S
+        self.caches = jax.tree_util.tree_map(
+            lambda t: jnp.zeros((S,) + tuple(t.shape), t.dtype),
+            plan._cache_template,
+        )
+
+    def free_slots(self) -> int:
+        return sum(a is None for a in self.active)
+
+    def has_active(self) -> bool:
+        return any(a is not None for a in self.active)
+
+    def admit(self, req: Request, tag: Any = None) -> bool:
+        """Prefill ``req`` into the lowest free slot; False when full."""
+        slot = next(
+            (s for s in range(self.S) if self.active[s] is None), None
+        )
+        if slot is None:
+            return False
+        plan = self.plan
+        first, cache_one = plan._prefill_one(req.prompt)
+        self.caches = plan._write(
+            self.caches, cache_one, jnp.asarray(slot, jnp.int32)
+        )
+        self.active[slot] = {
+            "req": req,
+            "cur_len": len(req.prompt),
+            "tokens": [first],
+            "steps": 1,
+            "tag": tag,
+        }
+        plan._requests += 1
+        return True
+
+    def step(self) -> List[Tuple[Any, Completion]]:
+        """One engine cycle minus admission: retire finished slots, then
+        advance every remaining active slot through ONE fused dispatch.
+        Returns the ``(tag, Completion)`` pairs retired this call."""
+        plan = self.plan
+        cfg = plan.config
+        done: List[Tuple[Any, Completion]] = []
+
+        # Eviction: retire finished slots (freed slots refill on the next
+        # admission pass, i.e. continuous batching at step granularity —
+        # same schedule as the per-slot reference loop).
+        advancing = []
+        for slot in range(self.S):
+            st = self.active[slot]
+            if st is None:
+                continue
+            req = st["req"]
+            if (
+                len(st["tokens"]) >= req.max_new_tokens
+                or (req.eos_id is not None and st["tokens"][-1] == req.eos_id)
+                or st["cur_len"] + 1 >= cfg.max_seq
+            ):
+                done.append(
+                    (
+                        st["tag"],
+                        Completion(
+                            rid=req.rid,
+                            tokens=np.asarray(st["tokens"], np.int32),
+                            prefill_len=len(req.prompt),
+                            steps=st["steps"],
+                        ),
+                    )
+                )
+                plan._tokens += len(st["tokens"])
+                self.active[slot] = None
+                continue
+            advancing.append(slot)
+
+        if not advancing:
+            return done
+
+        # The fused hot path: ONE jitted dispatch advances every slot.
+        # Idle slots ride along with position 0 and a dead cache — their
+        # outputs are discarded and their cache is overwritten at the
+        # next admission, so the step stays shape-stable at (S, ...).
+        tokens = np.zeros(self.S, np.int32)
+        cur_lens = np.zeros(self.S, np.int32)
+        for slot in advancing:
+            tokens[slot] = self.active[slot]["tokens"][-1]
+            cur_lens[slot] = self.active[slot]["cur_len"]
+        t0 = time.perf_counter()
+        nxt, self.caches = plan._fused(
+            plan.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(cur_lens),
+        )
+        nxt = np.asarray(nxt)
+        plan.metrics.decode_step_s.observe(time.perf_counter() - t0)
+        for slot in advancing:
+            st = self.active[slot]
+            st["tokens"].append(int(nxt[slot]))
+            st["cur_len"] += 1
+            st["steps"] += 1
+        plan._fused_steps += 1
+        plan._slot_steps += len(advancing)
+        return done
 
 
 class DecodePlan(ServePlan):
@@ -280,12 +486,14 @@ class DecodePlan(ServePlan):
     pytree.  Every step, all slots advance together through a single jitted
     ``vmap``'d ``decode_step`` with per-slot write positions — token-exact
     vs the per-slot reference loop (parity-tested), one dispatch per token
-    instead of ``max_batch``."""
+    instead of ``max_batch``.  :meth:`session` exposes the admit/step
+    machinery for continuous callers (the async engine)."""
 
     name = "decode"
 
-    def __init__(self, model, params, config: ServiceConfig):
-        super().__init__(config)
+    def __init__(self, model, params, config: ServiceConfig,
+                 metrics: Optional[ServiceMetrics] = None):
+        super().__init__(config, metrics)
         if getattr(model.cfg, "family", None) == "encdec":
             raise ValueError(
                 "DecodePlan serves decoder-only models; enc-dec serving "
@@ -349,6 +557,7 @@ class DecodePlan(ServePlan):
             raise ValueError(
                 f"prompt length {n} exceeds max_seq={self.config.max_seq}"
             )
+        t0 = time.perf_counter()
         m = self._prompt_bucket(n)
         cell = self._prefill_cells.get(m)
         if cell is None:
@@ -368,89 +577,27 @@ class DecodePlan(ServePlan):
              "last_pos": jnp.asarray(n - 1, jnp.int32)},
         )
         cache = pad_cache_like(cache, self._cache_template)
-        return int(jnp.argmax(logits[0])), cache
+        first = int(jnp.argmax(logits[0]))
+        self.metrics.prefill_s.observe(time.perf_counter() - t0)
+        return first, cache
 
     # ------------------------------------------------------------ generate
+    def session(self) -> DecodeSession:
+        """A fresh slot-state for continuous admission (the async engine's
+        substrate; ``generate`` opens one per call)."""
+        return DecodeSession(self)
+
     def generate(self, requests: List[Request]) -> List[Completion]:
-        """Continuous batching: admit into free slots, advance all active
-        slots through the fused step, evict on EOS/limits, refill."""
-        cfg = self.config
-        S = cfg.max_batch
-        pending = list(requests)[::-1]  # pop() admits in order
-        active: List[Optional[Dict]] = [None] * S
+        """Whole-queue continuous batching: admit into free slots, advance
+        all active slots through the fused step, evict on EOS/limits,
+        refill — the same DecodeSession schedule the async engine drives."""
+        sess = self.session()
+        pending: Deque[Request] = deque(requests)
         done: List[Completion] = []
-        caches = jax.tree_util.tree_map(
-            lambda t: jnp.zeros((S,) + tuple(t.shape), t.dtype),
-            self._cache_template,
-        )
-
-        while pending or any(a is not None for a in active):
-            # Admission: fill free slots (prefill per admitted request).
-            for slot in range(S):
-                if active[slot] is None and pending:
-                    req = pending.pop()
-                    first, cache_one = self._prefill_one(req.prompt)
-                    caches = self._write(
-                        caches, cache_one, jnp.asarray(slot, jnp.int32)
-                    )
-                    active[slot] = {
-                        "req": req,
-                        "cur_len": len(req.prompt),
-                        "tokens": [first],
-                        "steps": 1,
-                    }
-                    self._requests += 1
-
-            # Eviction: retire finished slots (freed slots refill on the
-            # next admission pass, i.e. continuous batching at step
-            # granularity — same schedule as the per-slot reference loop).
-            advancing = []
-            for slot in range(S):
-                st = active[slot]
-                if st is None:
-                    continue
-                req = st["req"]
-                if (
-                    len(st["tokens"]) >= req.max_new_tokens
-                    or (req.eos_id is not None and st["tokens"][-1] == req.eos_id)
-                    or st["cur_len"] + 1 >= cfg.max_seq
-                ):
-                    done.append(
-                        Completion(
-                            rid=req.rid,
-                            tokens=np.asarray(st["tokens"], np.int32),
-                            prefill_len=len(req.prompt),
-                            steps=st["steps"],
-                        )
-                    )
-                    self._tokens += len(st["tokens"])
-                    active[slot] = None
-                    continue
-                advancing.append(slot)
-
-            if not advancing:
-                continue
-
-            # The fused hot path: ONE jitted dispatch advances every slot.
-            # Idle slots ride along with position 0 and a dead cache — their
-            # outputs are discarded and their cache is overwritten at the
-            # next admission, so the step stays shape-stable at (S, ...).
-            tokens = np.zeros(S, np.int32)
-            cur_lens = np.zeros(S, np.int32)
-            for slot in advancing:
-                tokens[slot] = active[slot]["tokens"][-1]
-                cur_lens[slot] = active[slot]["cur_len"]
-            nxt, caches = self._fused(
-                self.params, caches, jnp.asarray(tokens), jnp.asarray(cur_lens)
-            )
-            nxt = np.asarray(nxt)
-            for slot in advancing:
-                st = active[slot]
-                st["tokens"].append(int(nxt[slot]))
-                st["cur_len"] += 1
-                st["steps"] += 1
-            self._fused_steps += 1
-            self._slot_steps += len(advancing)
+        while pending or sess.has_active():
+            while pending and sess.admit(pending[0]):
+                pending.popleft()
+            done.extend(c for _, c in sess.step())
         return done
 
     @property
@@ -475,8 +622,10 @@ class StreamingPlan(ServePlan):
 
     name = "streaming"
 
-    def __init__(self, compiled, config: ServiceConfig, layer: Optional[int] = None):
-        super().__init__(config)
+    def __init__(self, compiled, config: ServiceConfig,
+                 layer: Optional[int] = None,
+                 metrics: Optional[ServiceMetrics] = None):
+        super().__init__(config, metrics)
         self.session = compiled.streaming(
             layer=config.layer if layer is None else layer,
             max_batch=config.max_batch,
@@ -488,7 +637,10 @@ class StreamingPlan(ServePlan):
         self.session.feed(sample)
 
     def infer(self, sample):
-        return self.session.infer(sample)
+        t0 = time.perf_counter()
+        out = self.session.infer(sample)
+        self.metrics.batch_s.observe(time.perf_counter() - t0)
+        return out
 
     def flush(self) -> None:
         self.session.flush()
@@ -511,25 +663,95 @@ SERVE_PLANS = {
 # ----------------------------------------------------------------- service
 class InferenceService:
     """The serving front door: a request queue with admission control and
-    ordering policy, delegating execution to one bound ServePlan."""
+    ordering policy, delegating execution to one bound ServePlan.
+
+    Two execution surfaces share the queue semantics:
+
+    * the synchronous parity path — ``submit()`` returns bool, ``drain()``
+      runs everything queued through the plan in one call;
+    * the async path — ``start()`` hands the plan to a dedicated
+      executor thread (:class:`repro.runtime.engine.AsyncEngine`) and
+      ``submit()`` returns a ``concurrent.futures.Future``; decode slots
+      admit new requests mid-flight between jitted steps.
+    """
 
     def __init__(self, plan: ServePlan, config: ServiceConfig):
+        if config.policy == "sjf" and plan.name != "decode":
+            raise ValueError(
+                f"policy='sjf' orders decode Requests by prompt length; "
+                f"the {plan.name!r} plan has no request length to order by "
+                "(use policy='fcfs')"
+            )
         self.plan = plan
         self.config = config
+        self.metrics = plan.metrics
+        self.engine = None  # set by start()
         self._queue: Deque = deque()
-        self._rejected = 0
+        self._queue_t: Deque[float] = deque()
+
+    # --------------------------------------------------------------- async
+    def start(self, run: bool = True):
+        """Bind (and by default start) the async engine; ``submit()``
+        afterwards returns Futures.  Idempotent while the engine is live.
+
+        ``run=False`` binds the engine without launching its thread:
+        submits queue into the bounded inbox and execute when ``start()``
+        (or ``drain_and_stop()``) runs it — deterministic arrival order
+        for tests and pre-warmed startup.
+
+        Items already in the SYNC queue have no Future to resolve into, so
+        they cannot migrate: ``start()`` refuses while the sync queue is
+        non-empty (``drain()`` it first)."""
+        from repro.runtime.engine import AsyncEngine
+
+        if self._queue:
+            raise RuntimeError(
+                f"{len(self._queue)} item(s) in the sync queue have no "
+                "Future to resolve into; drain() before start()"
+            )
+        if self.engine is not None and not self.engine.stopped:
+            if run:
+                self.engine.start()
+            return self.engine
+        self.engine = AsyncEngine(self.plan, self.config)
+        if run:
+            self.engine.start()
+        return self.engine
+
+    def drain_and_stop(self):
+        """Finish all in-flight/queued async work, then stop the engine.
+        No-op when the engine was never started."""
+        if self.engine is not None:
+            self.engine.drain_and_stop()
 
     # --------------------------------------------------------------- queue
-    def submit(self, item) -> bool:
+    def submit(self, item):
         """Queue one work item (a Request for decode plans, a sample for
-        batched/streaming).  Returns False when max_queue rejects it."""
+        batched/streaming).
+
+        Synchronous mode: returns True, or False when ``max_queue`` rejects
+        the item.  Once ``start()`` has bound the async engine, delegates
+        to it and returns a ``concurrent.futures.Future`` (backpressure
+        raises ``QueueFull``; a stopped engine raises ``EngineStopped``
+        rather than silently reverting to the sync queue).
+
+        NOTE the streaming-plan semantics differ by surface: sync
+        ``submit``+``drain`` FEEDS samples (online training, matching the
+        paper's streaming-update mode), while async submits run INFERENCE
+        per item (futures resolve to scores — the latency-serving path).
+        Keep training feeds on the sync surface / ``feed()``."""
+        if self.engine is not None:
+            return self.engine.submit(item)
         if (
             self.config.max_queue is not None
             and len(self._queue) >= self.config.max_queue
         ):
-            self._rejected += 1
+            self.metrics.rejected.inc()
             return False
         self._queue.append(item)
+        self._queue_t.append(time.perf_counter())
+        self.metrics.submitted.inc()
+        self.metrics.queue_depth.set(len(self._queue))
         return True
 
     def _ordered(self, requests: List[Request]) -> List[Request]:
@@ -540,21 +762,38 @@ class InferenceService:
     def drain(self):
         """Run everything queued through the plan: completions (decode),
         stacked scores (batched), or a flush (streaming)."""
+        if self.engine is not None and not self.engine.stopped:
+            raise RuntimeError(
+                "the async engine owns this service's queue; submit() "
+                "returns Futures — use them, or drain_and_stop() first"
+            )
         items = list(self._queue)
+        stamps = list(self._queue_t)
         self._queue.clear()
+        self._queue_t.clear()
+        self.metrics.queue_depth.set(0)
+        now = time.perf_counter()
+        for t in stamps:
+            self.metrics.queue_wait_s.observe(now - t)
         if not items:
             self.plan.flush()
             # Decode plans always answer with completions, even for an
             # empty queue (callers iterate the result).
             return [] if self.plan.name == "decode" else None
         if isinstance(items[0], Request):
-            return self.plan.generate(self._ordered(items))
-        if self.plan.name == "streaming":
+            out = self.plan.generate(self._ordered(items))
+        elif self.plan.name == "streaming":
             for s in items:
                 self.plan.feed(s)
             self.plan.flush()
-            return None
-        return self.plan.predict(np.stack([np.asarray(s) for s in items]))
+            out = None
+        else:
+            out = self.plan.predict(np.stack([np.asarray(s) for s in items]))
+        end = time.perf_counter()
+        for t in stamps:
+            self.metrics.e2e_s.observe(end - t)
+        self.metrics.completed.inc(len(items))
+        return out
 
     # -------------------------------------------------- direct conveniences
     def predict(self, x):
@@ -573,21 +812,33 @@ class InferenceService:
         self.plan.flush()
 
     def close(self) -> None:
+        if self.engine is not None:
+            self.engine.drain_and_stop()
         self.plan.close()
 
     @property
     def stats(self) -> Dict[str, Any]:
-        return {
+        engine_live = self.engine is not None and not self.engine.stopped
+        out = {
             "plan": self.plan.name,
-            "queued": len(self._queue),
-            "rejected": self._rejected,
+            # Queued = the sync queue plus the engine inbox: callers sizing
+            # backpressure see every waiting item wherever it waits.
+            "queued": len(self._queue)
+            + (self.engine.inbox_depth if engine_live else 0),
+            "rejected": self.metrics.rejected.value,
             **self.plan.stats,
+            "telemetry": self.metrics.snapshot(),
         }
+        if self.engine is not None:
+            out["engine"] = self.engine.stats
+        return out
 
 
 def serve_model(model, params, config: Optional[ServiceConfig] = None) -> InferenceService:
     """Bind an LM (CausalLM + params) to an InferenceService — the LM-zoo
-    twin of ``CompiledNetwork.serve``.  Only the decode plan applies."""
+    twin of ``CompiledNetwork.serve``.  Only the decode plan applies.
+    ``ServiceConfig(async_mode=True)`` starts the executor thread at bind
+    time (submit() then returns Futures)."""
     config = config if config is not None else ServiceConfig()
     plan_name = config.plan or "decode"
     if plan_name != "decode":
@@ -595,7 +846,10 @@ def serve_model(model, params, config: Optional[ServiceConfig] = None) -> Infere
             f"serve_model() serves token decoding; plan {plan_name!r} needs "
             "a CompiledNetwork (use compiled.serve)"
         )
-    return InferenceService(DecodePlan(model, params, config), config)
+    service = InferenceService(DecodePlan(model, params, config), config)
+    if config.async_mode:
+        service.start()
+    return service
 
 
 __all__ = [
@@ -606,6 +860,7 @@ __all__ = [
     "ServiceConfig",
     "ServePlan",
     "BatchedPlan",
+    "DecodeSession",
     "DecodePlan",
     "StreamingPlan",
     "SERVE_PLANS",

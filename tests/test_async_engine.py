@@ -1,0 +1,383 @@
+"""Async serving engine: continuous batching, futures, backpressure,
+graceful drain, and the latency-telemetry subsystem."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    AsyncEngine,
+    EngineStopped,
+    Histogram,
+    QueueFull,
+    Request,
+    ServiceConfig,
+    serve_model,
+)
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+
+    cfg = get_smoke_config("yi-9b")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _reqs(cfg, lengths, max_new=5, eos_id=None):
+    return [
+        Request(
+            rid=i,
+            prompt=RNG.integers(0, cfg.vocab_size, n).astype(np.int32),
+            max_new_tokens=max_new,
+            eos_id=eos_id,
+        )
+        for i, n in enumerate(lengths)
+    ]
+
+
+def _compiled_bcpnn(seed=0):
+    from repro.core import (
+        ExecutionConfig,
+        Network,
+        StructuralPlasticityLayer,
+        UnitLayout,
+    )
+    from repro.data import complementary_code, mnist_like
+
+    ds = mnist_like(n_train=128, n_test=32, n_features=32, seed=seed)
+    x, layout = complementary_code(ds.x_train)
+    net = Network(seed=seed).add(
+        StructuralPlasticityLayer(
+            layout, UnitLayout(4, 8), fan_in=16, lam=0.05, gain=4.0
+        )
+    )
+    return net.compile(ExecutionConfig()), np.asarray(x)
+
+
+# ----------------------------------------------------------- decode engine
+class TestAsyncDecode:
+    def test_token_identical_to_sync_drain(self, lm):
+        """Deterministic arrivals (everything queued before the loop runs):
+        the engine drives the same DecodeSession schedule as drain()."""
+        cfg, m, params = lm
+        reqs = _reqs(cfg, (4, 11, 7, 16, 5))
+        sync = serve_model(m, params, ServiceConfig(max_batch=2, max_seq=48))
+        for r in reqs:
+            assert sync.submit(r) is True
+        ref = {c.rid: c for c in sync.drain()}
+
+        svc = serve_model(m, params, ServiceConfig(max_batch=2, max_seq=48))
+        svc.start(run=False)  # bind unstarted: submits queue deterministically
+        futs = [svc.submit(r) for r in reqs]
+        svc.drain_and_stop()  # runs everything queued, then stops
+        out = {c.rid: c for c in (f.result(timeout=60) for f in futs)}
+        assert ref.keys() == out.keys()
+        for rid in ref:
+            np.testing.assert_array_equal(
+                ref[rid].tokens, out[rid].tokens, err_msg=f"rid={rid}"
+            )
+            assert ref[rid].prefill_len == out[rid].prefill_len
+            assert ref[rid].steps == out[rid].steps
+
+    def test_mid_flight_slot_admission(self, lm):
+        """A request submitted after start() lands in a freed slot while
+        another request is mid-generation."""
+        cfg, m, params = lm
+        svc = serve_model(
+            m, params,
+            ServiceConfig(max_batch=2, max_seq=64, async_mode=True),
+        )
+        long_req = _reqs(cfg, (6,), max_new=40)[0]
+        f_long = svc.submit(long_req)
+        # Wait until the long request is actually decoding.
+        deadline = time.time() + 60
+        while svc.plan._fused_steps < 2 and time.time() < deadline:
+            time.sleep(0.005)
+        assert svc.plan._fused_steps >= 2, "long request never started"
+        late = Request(rid=99, prompt=long_req.prompt.copy(), max_new_tokens=4)
+        f_late = svc.submit(late)
+        late_done = f_late.result(timeout=60)
+        long_done = f_long.result(timeout=60)
+        svc.drain_and_stop()
+        assert long_done.rid == 0 and len(long_done.tokens) == 40
+        assert late_done.rid == 99 and len(late_done.tokens) == 4
+        # Slot independence: the mid-flight request's tokens equal a solo
+        # run of the same prompt (same params, greedy decode).
+        solo = serve_model(
+            m, params, ServiceConfig(max_batch=1, max_seq=64)
+        ).generate([late])
+        np.testing.assert_array_equal(late_done.tokens, solo[0].tokens)
+        assert svc.engine.admitted == 2
+        # Both slots really shared fused steps at some point.
+        assert svc.stats["mean_occupancy"] > 1.0
+
+    def test_backpressure_rejection_counts(self, lm):
+        cfg, m, params = lm
+        svc = serve_model(
+            m, params, ServiceConfig(max_batch=1, max_seq=48, max_queue=2)
+        )
+        eng = svc.start(run=False)
+        reqs = _reqs(cfg, (4, 5, 6), max_new=2)
+        f1, f2 = svc.submit(reqs[0]), svc.submit(reqs[1])
+        with pytest.raises(QueueFull):
+            svc.submit(reqs[2])
+        assert svc.stats["rejected"] == 1
+        assert svc.stats["queued"] == 2  # engine inbox counts as queued
+        eng.drain_and_stop()
+        assert f1.result(timeout=60).rid == 0
+        assert f2.result(timeout=60).rid == 1
+        with pytest.raises(EngineStopped):
+            svc.submit(reqs[2])
+        assert svc.stats["rejected"] == 2
+
+    def test_drain_and_stop_no_dropped_futures(self, lm):
+        cfg, m, params = lm
+        svc = serve_model(
+            m, params,
+            ServiceConfig(max_batch=2, max_seq=48, async_mode=True),
+        )
+        futs = [svc.submit(r) for r in _reqs(cfg, (4, 9, 6, 5), max_new=3)]
+        svc.drain_and_stop()
+        assert all(f.done() for f in futs)
+        assert sorted(f.result().rid for f in futs) == [0, 1, 2, 3]
+        assert svc.engine.stopped
+        assert svc.stats["telemetry"]["completed"] == 4
+        assert svc.stats["telemetry"]["queue_wait_s"]["count"] == 4
+        assert svc.stats["telemetry"]["e2e_s"]["p95"] > 0
+
+    def test_submit_error_fails_future_only(self, lm):
+        """A bad request fails ITS future; the engine keeps serving."""
+        cfg, m, params = lm
+        svc = serve_model(
+            m, params,
+            ServiceConfig(max_batch=1, max_seq=16, async_mode=True),
+        )
+        bad = Request(rid=0, prompt=np.arange(99, dtype=np.int32),
+                      max_new_tokens=2)  # longer than max_seq
+        good = _reqs(cfg, (4,), max_new=2)[0]
+        f_bad, f_good = svc.submit(bad), svc.submit(good)
+        with pytest.raises(ValueError, match="max_seq"):
+            f_bad.result(timeout=60)
+        assert len(f_good.result(timeout=60).tokens) == 2
+        svc.drain_and_stop()
+
+    def test_sjf_policy_in_engine(self, lm):
+        """Pre-queued sjf admission matches the sorted sync semantics."""
+        cfg, m, params = lm
+        svc = serve_model(
+            m, params,
+            ServiceConfig(max_batch=1, max_seq=48, policy="sjf"),
+        )
+        svc.start(run=False)
+        finished = []
+        futs = [svc.submit(r) for r in _reqs(cfg, (15, 4, 9), max_new=3)]
+        for f in futs:
+            f.add_done_callback(lambda f: finished.append(f.result().prefill_len))
+        svc.drain_and_stop()
+        # max_batch=1 + sjf => admission (and completion) ordered by length,
+        # exactly like the sorted sync drain.
+        assert finished == [4, 9, 15]
+        assert svc.engine.admitted == 3
+
+
+# ---------------------------------------------------------- batched engine
+class TestAsyncBatched:
+    def test_multithreaded_clients_hammering_submit(self):
+        compiled, x = _compiled_bcpnn()
+        want = np.asarray(compiled.predict(x[:16]))
+        svc = compiled.serve(
+            ServiceConfig(plan="batched", max_batch=8, async_mode=True)
+        )
+        results = {}
+        lock = threading.Lock()
+
+        def client(tid):
+            futs = [(i, svc.submit(x[i])) for i in range(16)]
+            for i, f in futs:
+                r = np.asarray(f.result(timeout=60))
+                with lock:
+                    results[(tid, i)] = r
+
+        threads = [threading.Thread(target=client, args=(t,)) for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120)
+        svc.drain_and_stop()
+        assert len(results) == 64
+        for (tid, i), got in results.items():
+            np.testing.assert_allclose(
+                got, want[i], rtol=1e-5, atol=1e-7, err_msg=f"{tid}:{i}"
+            )
+        assert svc.stats["telemetry"]["completed"] == 64
+        assert svc.engine.batches >= 64 // 8  # micro-batching really formed
+
+    def test_deadline_flushes_partial_batch(self):
+        """max_wait_s dispatches a partial batch instead of waiting for
+        max_batch forever — the deadline knob finally means something for
+        the batched plan."""
+        compiled, x = _compiled_bcpnn()
+        want = np.asarray(compiled.predict(x[:2]))
+        svc = compiled.serve(
+            ServiceConfig(
+                plan="batched", max_batch=64, max_wait_s=0.05,
+                async_mode=True,
+            )
+        )
+        f0, f1 = svc.submit(x[0]), svc.submit(x[1])
+        np.testing.assert_allclose(
+            np.asarray(f0.result(timeout=30)), want[0], rtol=1e-5, atol=1e-7
+        )
+        np.testing.assert_allclose(
+            np.asarray(f1.result(timeout=30)), want[1], rtol=1e-5, atol=1e-7
+        )
+        svc.drain_and_stop()
+        assert svc.engine.batches >= 1
+
+    def test_sjf_rejected_for_non_decode_plans(self):
+        compiled, _ = _compiled_bcpnn()
+        with pytest.raises(ValueError, match="sjf"):
+            compiled.serve(ServiceConfig(plan="batched", policy="sjf"))
+        with pytest.raises(ValueError, match="sjf"):
+            compiled.serve(ServiceConfig(plan="streaming", policy="sjf"))
+
+
+# ------------------------------------------------------------- telemetry
+class TestMetrics:
+    def test_histogram_percentiles_match_numpy(self):
+        h = Histogram(window=4096)
+        vals = RNG.permutation(np.linspace(0.001, 1.0, 1000))
+        for v in vals:
+            h.observe(float(v))
+        for p in (50, 95, 99):
+            assert h.percentile(p) == pytest.approx(
+                float(np.percentile(vals, p)), rel=1e-12
+            )
+        snap = h.snapshot()
+        assert snap["count"] == 1000
+        assert snap["max"] == pytest.approx(1.0)
+        assert snap["mean"] == pytest.approx(float(vals.mean()))
+
+    def test_histogram_window_bounds_memory(self):
+        h = Histogram(window=100)
+        for v in range(250):
+            h.observe(float(v))
+        assert h.count == 250  # lifetime count is exact
+        # Percentiles reflect the last 100 observations only.
+        assert h.percentile(50) == pytest.approx(
+            float(np.percentile(np.arange(150, 250, dtype=float), 50))
+        )
+
+    def test_counters_thread_safe(self):
+        from repro.runtime import Counter
+
+        c = Counter()
+
+        def spin():
+            for _ in range(1000):
+                c.inc()
+
+        threads = [threading.Thread(target=spin) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert c.value == 8000
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_sync_drain_records_telemetry(self, lm):
+        cfg, m, params = lm
+        svc = serve_model(m, params, ServiceConfig(max_batch=2, max_seq=48))
+        for r in _reqs(cfg, (4, 7), max_new=3):
+            svc.submit(r)
+        svc.drain()
+        t = svc.stats["telemetry"]
+        assert t["submitted"] == 2 and t["completed"] == 2
+        assert t["queue_wait_s"]["count"] == 2
+        assert t["prefill_s"]["count"] == 2
+        assert t["decode_step_s"]["count"] >= 2
+        assert t["e2e_s"]["max"] >= t["e2e_s"]["p50"] > 0
+
+
+# ------------------------------------------------------- engine lifecycle
+class TestEngineLifecycle:
+    def test_engine_restart_rejected(self, lm):
+        cfg, m, params = lm
+        svc = serve_model(m, params, ServiceConfig(max_batch=1, max_seq=32))
+        eng = svc.start()
+        eng.drain_and_stop()
+        with pytest.raises(RuntimeError, match="stopped"):
+            eng.start()
+        # But the service can bind a FRESH engine after a stop.
+        eng2 = svc.start()
+        assert eng2 is not eng
+        f = svc.submit(_reqs(cfg, (4,), max_new=2)[0])
+        assert len(f.result(timeout=60).tokens) == 2
+        svc.drain_and_stop()
+
+    def test_drain_while_draining_is_idempotent(self, lm):
+        cfg, m, params = lm
+        svc = serve_model(
+            m, params, ServiceConfig(max_batch=1, max_seq=32, async_mode=True)
+        )
+        svc.submit(_reqs(cfg, (4,), max_new=2)[0])
+        svc.drain_and_stop()
+        svc.drain_and_stop()  # no-op, no deadlock
+        assert svc.engine.stopped
+
+    def test_sync_drain_raises_while_engine_owns_queue(self, lm):
+        cfg, m, params = lm
+        svc = serve_model(
+            m, params, ServiceConfig(max_batch=1, max_seq=32, async_mode=True)
+        )
+        with pytest.raises(RuntimeError, match="engine"):
+            svc.drain()
+        svc.drain_and_stop()
+
+    def test_start_refuses_with_items_in_sync_queue(self, lm):
+        """Sync-queued items have no Future to resolve into; start() must
+        not silently strand them behind the engine."""
+        cfg, m, params = lm
+        svc = serve_model(m, params, ServiceConfig(max_batch=1, max_seq=32))
+        assert svc.submit(_reqs(cfg, (4,), max_new=2)[0]) is True
+        with pytest.raises(RuntimeError, match="drain"):
+            svc.start()
+        assert len(svc.drain()) == 1  # still served by the sync path
+        svc.start()
+        svc.drain_and_stop()
+
+    def test_cancelled_future_is_skipped_not_fatal(self, lm):
+        """A caller cancelling a queued future must not kill the loop."""
+        cfg, m, params = lm
+        svc = serve_model(m, params, ServiceConfig(max_batch=1, max_seq=48))
+        svc.start(run=False)
+        reqs = _reqs(cfg, (4, 5, 6), max_new=2)
+        f0, f1, f2 = (svc.submit(r) for r in reqs)
+        assert f1.cancel()  # still queued: cancellable
+        svc.drain_and_stop()
+        assert f0.result().rid == 0 and f2.result().rid == 2
+        assert f1.cancelled()
+        # The cancelled request was never admitted or served.
+        assert svc.engine.admitted == 2
+        assert svc.stats["telemetry"]["completed"] == 2
+
+    def test_engine_direct_construction(self, lm):
+        """AsyncEngine composes with a bare plan (no service wrapper)."""
+        cfg, m, params = lm
+        from repro.runtime import DecodePlan
+
+        plan = DecodePlan(m, params, ServiceConfig(max_batch=2, max_seq=48))
+        eng = AsyncEngine(plan, plan.config)
+        futs = [eng.submit(r) for r in _reqs(cfg, (4, 6), max_new=2)]
+        eng.drain_and_stop()
+        assert [f.result().rid for f in futs] == [0, 1]
+        assert eng.stats["state"] == "stopped"

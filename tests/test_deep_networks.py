@@ -227,6 +227,47 @@ class TestActivationStore:
         net = build_deep(layout).compile(ExecutionConfig())
         assert net.activations.level(0, list(net.state.layers), x, 64) is x
 
+    def test_multi_dataset_entries_coexist(self, dataset):
+        """Alternating fit(train)/evaluate(test) keeps BOTH projections
+        cached under one budget — no per-level thrash."""
+        ds, x, x_te, layout = dataset
+        net = build_deep(layout).compile(ExecutionConfig())
+        net.fit((x, ds.y_train), **KW)
+        store = net.activations
+        net.predict(x_te)  # projects the test set once
+        p, h = store.stats["projections"], store.stats["hits"]
+        net.predict(x)  # train level-3 STILL cached (old store evicted it)
+        net.predict(x_te)  # test level-3 cached too
+        assert store.stats["projections"] == p
+        assert store.stats["hits"] == h + 2
+        assert store.datasets == 2
+        # The alternation the ROADMAP item named, repeated: zero re-projects.
+        net.evaluate((x_te, ds.y_test))
+        net.evaluate((x, ds.y_train))
+        assert store.stats["projections"] == p
+
+    def test_host_budget_bounds_spilled_bytes(self, dataset):
+        """Host-spilled entries are bounded too: LRU host entries are
+        dropped (recomputable) instead of growing host memory forever."""
+        ds, x, x_te, layout = dataset
+        net = build_deep(layout).compile(
+            ExecutionConfig(activation_budget_mb=1e-4)
+        )
+        net.fit((x, ds.y_train), **KW)
+        net.predict(x_te)
+        store = net.activations
+        # Bounded up to one working entry: the just-inserted level is never
+        # dropped, so a budget smaller than a single entry keeps exactly it.
+        largest = max(e.nbytes for e in store._entries.values())
+        assert store.host_bytes <= max(store.host_budget_bytes, largest)
+        assert store.stats["evictions"] > 0
+        # Numerics unaffected by the churn.
+        roomy = build_deep(layout).compile(ExecutionConfig())
+        roomy.fit((x, ds.y_train), **KW)
+        np.testing.assert_array_equal(
+            np.asarray(net.predict(x_te)), np.asarray(roomy.predict(x_te))
+        )
+
 
 class TestCheckpointRoundTrip:
     @pytest.mark.parametrize("readout", ["bcpnn", "sgd"])

@@ -214,6 +214,26 @@ class TestBatchedService:
             np.asarray(scores), np.asarray(compiled.predict(x[:5]))
         )
 
+    def test_served_predict_reuses_level_projection(self):
+        """Serving routes through the compiled network's shared build_head
+        level-H projection: a repeated request batch hits the cached
+        activation store entry and pays only the readout head."""
+        compiled, x = _compiled_bcpnn()
+        svc = compiled.serve(ServiceConfig(plan="batched", max_batch=64))
+        store = compiled.activations
+        a = np.asarray(svc.predict(x[:32]))
+        p = store.stats["projections"]
+        # A fresh array with the same bytes — the content canonicalization
+        # maps it onto the first anchor, so the store projection hits.
+        b = np.asarray(svc.predict(np.array(x[:32])))
+        assert store.stats["projections"] == p
+        assert svc.plan.stats["projection_reuse_hits"] >= 1
+        np.testing.assert_array_equal(a, b)
+        # ONE head definition serves both surfaces: serving compiled the
+        # shared jitted head (not a private forward), and agrees with it.
+        assert compiled._head is not None
+        np.testing.assert_array_equal(a, np.asarray(compiled.predict(x[:32])))
+
 
 class TestStreamingService:
     def test_streaming_plan_adopts_state(self):
