@@ -61,6 +61,9 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny dimensions for CI (seconds, not minutes)")
+    ap.add_argument("--strict", action="store_true",
+                    help="strict verification: transfer guard on every "
+                         "dispatch, recompile sentinel, finite-value checks")
     args = ap.parse_args()
 
     if args.smoke:
@@ -77,7 +80,8 @@ def main():
     x_te, _ = complementary_code(ds.x_test)
 
     model = build_deep(layout, widths, fan_in)
-    compiled = model.compile(ExecutionConfig())  # project-once by default
+    # project-once by default; --strict layers the hot-path guards on top
+    compiled = model.compile(ExecutionConfig(strict=args.strict))
 
     t0 = time.perf_counter()
     res = compiled.fit(

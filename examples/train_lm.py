@@ -39,10 +39,10 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     args = ap.parse_args()
 
-    d, l, h, kv, ff, v = PRESETS[args.preset]
+    d, nl, h, kv, ff, v = PRESETS[args.preset]
     cfg = dataclasses.replace(
         get_smoke_config("yi-9b"),
-        d_model=d, n_layers=l, n_heads=h, n_kv_heads=kv,
+        d_model=d, n_layers=nl, n_heads=h, n_kv_heads=kv,
         d_head=d // h, d_ff=ff, vocab_size=v, n_micro=1,
         q_chunk=128, kv_chunk=256,
     )

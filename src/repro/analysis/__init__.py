@@ -1,0 +1,39 @@
+# Hot-path guard subsystem: the static side (jaxlint, pure stdlib — safe to
+# import without jax, which is how the CI lint job runs it) is re-exported
+# eagerly; the runtime side (strict-mode verification) imports jax, so it
+# loads lazily via __getattr__ to keep `import repro.analysis` jax-free.
+from repro.analysis.lint import (
+    DEFAULT_HOT_MODULES,
+    RULES,
+    Finding,
+    lint_paths,
+    lint_source,
+)
+
+_STRICT_EXPORTS = (
+    "StrictViolation",
+    "HostTransferError",
+    "RecompileError",
+    "NonFiniteError",
+    "RecompileSentinel",
+    "dispatch_guard",
+    "finite_checker",
+)
+
+
+def __getattr__(name):
+    if name in _STRICT_EXPORTS:
+        from repro.analysis import strict
+
+        return getattr(strict, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "DEFAULT_HOT_MODULES",
+    "RULES",
+    "Finding",
+    "lint_paths",
+    "lint_source",
+    *_STRICT_EXPORTS,
+]

@@ -1,0 +1,202 @@
+"""Strict runtime verification: the dynamic side of the hot-path guard.
+
+jaxlint (:mod:`repro.analysis.lint`) proves statically that no host sync sits
+on a hot path; this module proves the *dynamic* properties the linter cannot
+see: that dispatching a compiled epoch or fused decode step performs no
+implicit host transfer, that no jitted callable silently retraces across
+repeated ``fit`` / ``partial_fit`` / ``submit`` calls, and that the BCPNN
+trace/weight updates stay finite.  ``ExecutionConfig(strict=True)`` /
+``ServiceConfig(strict=True)`` turn all three on; the guards live entirely at
+entry/exit of the already-batched dispatch calls, so the steady-state cost is
+a context-manager enter per *epoch* (not per batch) and one cache-size
+integer read per jitted callable per public call.
+
+Three failure classes, three exceptions (all :class:`StrictViolation`):
+
+* :class:`HostTransferError` — an *implicit* transfer happened inside a
+  guarded dispatch (``jax.transfer_guard("disallow")``).  Explicit staging
+  (``jnp.asarray`` / ``device_put``) is allowed; a numpy array silently
+  falling into a jitted call is not.
+* :class:`RecompileError` — a watched jitted callable's ``_cache_size()``
+  grew after its baseline was taken: something fed it a new shape/dtype or
+  a new static value.  New callables (a new layer, a new prefill bucket)
+  get their own baseline; only *growth on the same callable* raises.
+* :class:`NonFiniteError` — a ``checkify``-verified NaN/Inf in a state
+  pytree (the EWMA traces and log-ratio weights are the usual victims of a
+  too-aggressive learning rate or a zero marginal).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+
+class StrictViolation(RuntimeError):
+    """Base class for every strict-mode failure."""
+
+
+class HostTransferError(StrictViolation):
+    """Implicit host transfer inside a guarded dispatch."""
+
+
+class RecompileError(StrictViolation):
+    """A watched jitted callable re-traced after its baseline."""
+
+
+class NonFiniteError(StrictViolation):
+    """NaN/Inf detected in a guarded state pytree."""
+
+
+# --------------------------------------------------------------- transfers
+@contextlib.contextmanager
+def dispatch_guard(enabled: bool = True) -> Iterator[None]:
+    """``jax.transfer_guard("disallow")`` scoped to one dispatch, with the
+    raw XlaRuntimeError translated into :class:`HostTransferError`.
+
+    Wrap exactly the compiled-callable dispatch (the epoch scan, the fused
+    decode step, the serving head) — inputs must already be staged with an
+    *explicit* ``jnp.asarray`` / ``device_put`` (which the guard permits);
+    telemetry readbacks belong outside the ``with``.  ``enabled=False`` is a
+    no-op so call sites need no branching.
+    """
+    if not enabled:
+        yield
+        return
+    try:
+        with jax.transfer_guard("disallow"):
+            yield
+    except Exception as e:  # noqa: BLE001 — inspect, translate, or re-raise
+        msg = str(e)
+        if "transfer" in msg and ("isallow" in msg or "guard" in msg):
+            raise HostTransferError(
+                f"implicit host transfer inside a guarded dispatch: {msg} — "
+                "stage inputs with an explicit jnp.asarray/device_put before "
+                "the compiled call, or waive the site in jaxlint and keep it "
+                "outside the guard"
+            ) from e
+        raise
+
+
+# -------------------------------------------------------------- recompiles
+class RecompileSentinel:
+    """Tracks ``_cache_size()`` of watched jitted callables and raises on
+    unexpected growth.
+
+    ``watch(name, fn)`` is idempotent and cheap — call it with the *current*
+    callable every time (registries grow: new layers, new prefill buckets,
+    replaced epoch closures).  A replaced function object re-baselines; the
+    same object growing its trace cache past the baseline raises
+    :class:`RecompileError` at the next ``check()``.  Baselines are taken at
+    the first ``check()`` that sees a non-empty cache, so warm-up traces
+    never count as violations.
+    """
+
+    def __init__(self) -> None:
+        # name -> (id(fn), fn, baseline cache size or None until warm)
+        self._watched: Dict[str, Tuple[int, Any, Optional[int]]] = {}
+
+    def watch(self, name: str, fn: Any) -> None:
+        if fn is None or not hasattr(fn, "_cache_size"):
+            return
+        prev = self._watched.get(name)
+        if prev is not None and prev[0] == id(fn):
+            return
+        self._watched[name] = (id(fn), fn, None)
+
+    def watch_all(self, fns: Dict[str, Any], prefix: str = "") -> None:
+        for name, fn in fns.items():
+            self.watch(f"{prefix}{name}", fn)
+
+    def sizes(self) -> Dict[str, int]:
+        """Current trace-cache sizes of every watched callable."""
+        return {
+            name: fn._cache_size()
+            for name, (_, fn, _b) in self._watched.items()
+        }
+
+    def check(self, where: str = "") -> None:
+        """Baseline unbaselined warm callables; raise on growth."""
+        for name, (fid, fn, baseline) in list(self._watched.items()):
+            size = fn._cache_size()
+            if baseline is None:
+                if size >= 1:
+                    self._watched[name] = (fid, fn, size)
+                continue
+            if size > baseline:
+                ctx = f" during {where}" if where else ""
+                raise RecompileError(
+                    f"jitted callable {name!r} re-traced{ctx}: trace cache "
+                    f"grew {baseline} -> {size}.  A new input shape/dtype or "
+                    "static value reached a hot-path callable that is "
+                    "supposed to compile exactly once."
+                )
+
+    def rebaseline(self) -> None:
+        """Adopt current sizes as the new baselines (after an *intentional*
+        shape change, e.g. reconfiguring a service)."""
+        for name, (fid, fn, _b) in list(self._watched.items()):
+            size = fn._cache_size()
+            self._watched[name] = (fid, fn, size if size >= 1 else None)
+
+
+# ------------------------------------------------------------ finite guard
+def finite_checker() -> Callable:
+    """A reusable finite-value guard over state pytrees.
+
+    Returns ``check(tree, where="...")`` which verifies every inexact leaf
+    of ``tree`` is finite via one jitted :mod:`checkify` call and raises
+    :class:`NonFiniteError` naming the offending leaf's pytree path.  The
+    checked function is cached per (paths, shapes, dtypes) structure, so
+    per-epoch calls on a stable state cost one dispatch plus one scalar
+    error-flag readback.
+    """
+    cache: Dict[Any, Callable] = {}
+
+    def _build(paths: Tuple[str, ...]) -> Callable:
+        def body(leaves):
+            for path, leaf in zip(paths, leaves):
+                checkify.check(
+                    jnp.all(jnp.isfinite(leaf)),
+                    f"non-finite values in {path}",
+                )
+
+        return jax.jit(checkify.checkify(body))
+
+    def check(tree: Any, where: str = "state") -> None:
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        items = [
+            (jax.tree_util.keystr(path), leaf)
+            for path, leaf in flat
+            if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.inexact)
+        ]
+        if not items:
+            return
+        paths = tuple(p for p, _ in items)
+        leaves = [leaf for _, leaf in items]
+        key = (paths, tuple((leaf.shape, str(leaf.dtype)) for leaf in leaves))
+        fn = cache.get(key)
+        if fn is None:
+            fn = _build(paths)
+            cache[key] = fn
+        err, _ = fn(leaves)
+        try:
+            err.throw()
+        except checkify.JaxRuntimeError as e:
+            raise NonFiniteError(f"{where}: {e}") from e
+
+    return check
+
+
+__all__ = [
+    "StrictViolation",
+    "HostTransferError",
+    "RecompileError",
+    "NonFiniteError",
+    "dispatch_guard",
+    "RecompileSentinel",
+    "finite_checker",
+]

@@ -132,6 +132,13 @@ class ExecutionConfig:
     activation_budget_mb: device-memory budget for cached level-k
                  activations; levels beyond it are spilled to host memory
                  (epoch gathers fall back to the host path transparently).
+    strict:      runtime hot-path verification (repro.analysis.strict):
+                 epoch dispatches run under jax.transfer_guard("disallow"),
+                 a recompile sentinel asserts every jitted callable compiles
+                 exactly once across repeated fit/partial_fit/predict calls,
+                 and checkify finite-value guards run on the BCPNN state
+                 after every epoch.  Guards sit at phase entry/exit only, so
+                 steady-state throughput is unchanged.
     """
 
     engine: str = "scan"
@@ -141,6 +148,7 @@ class ExecutionConfig:
     donate: bool = True
     cache_activations: bool = True
     activation_budget_mb: float = 512.0
+    strict: bool = False
 
     def __post_init__(self):
         # Validate against the plan registry — the single source of truth —
@@ -181,7 +189,7 @@ class CompiledNetwork:
         self.network = network
         self.config = config if config is not None else ExecutionConfig()
         network.build()
-        self.layers = [self.config.bind_layer(l) for l in network.layers]
+        self.layers = [self.config.bind_layer(layer) for layer in network.layers]
         # Copy the initial states: the scan plan donates its state carry on
         # accelerators, so aliasing network.states here would invalidate the
         # declarative Network's buffers on the first fit (breaking repeated
@@ -193,7 +201,8 @@ class CompiledNetwork:
             readout=None,
         )
         self.plan: ExecutionPlan = make_plan(
-            self.config.engine, self.layers, donate=self.config.donate
+            self.config.engine, self.layers, donate=self.config.donate,
+            strict=self.config.strict,
         )
         if self.config.trainer is not None:
             self.plan = self.config.trainer.decorate(self.plan)
@@ -214,6 +223,16 @@ class CompiledNetwork:
         # this compiled network opens (see streaming()).
         self._stream_train_cells: dict = {}
         self._stream_infer_cells: dict = {}
+        # Strict-mode verification (repro.analysis.strict): a recompile
+        # sentinel over every jitted callable and a checkify finite guard
+        # the program runners call after each epoch.
+        self._sentinel = None
+        self._finite_check = None
+        if self.config.strict:
+            from repro.analysis.strict import RecompileSentinel, finite_checker
+
+            self._sentinel = RecompileSentinel()
+            self._finite_check = finite_checker()
 
     # ------------------------------------------------------------ structure
     @property
@@ -225,6 +244,22 @@ class CompiledNetwork:
         return self.plan.readout_layer
 
     # -------------------------------------------------------------- forward
+    def _strict_check(self, where: str) -> None:
+        """Strict-mode recompile audit: (re)watch every jitted callable this
+        network owns — the plan's registry grows as phases compile — then
+        assert none re-traced.  No-op unless ``config.strict``."""
+        if self._sentinel is None:
+            return
+        self._sentinel.watch_all(self.plan.jitted, prefix="plan.")
+        self._sentinel.watch("forward", self._fwd)
+        self._sentinel.watch("head", self._head)
+        if self.activations is not None:
+            for (j, k), fn in self.activations._proj_scan.items():
+                self._sentinel.watch(f"proj_scan[{j}->{k}]", fn)
+            for (j, k), fn in self.activations._proj_chunk.items():
+                self._sentinel.watch(f"proj_chunk[{j}->{k}]", fn)
+        self._sentinel.check(where)
+
     def _forward_fn(self) -> Callable:
         """The jitted full-network forward, built exactly once per compile
         (see :func:`build_forward`)."""
@@ -248,6 +283,8 @@ class CompiledNetwork:
         SAME level-H projection training used — so repeated predict/evaluate
         on one dataset (and predict right after fit on the train set) skip
         the frozen stack entirely; only the readout head runs per call."""
+        from repro.analysis.strict import dispatch_guard
+
         outs = []
         if self.activations is not None and self.hidden_layers:
             n_hidden = len(self.hidden_layers)
@@ -256,25 +293,28 @@ class CompiledNetwork:
             )
             head = self._head_fn()
             for i in range(0, h.shape[0], batch_size):
-                outs.append(
-                    head(self.state.layers, self.state.readout,
-                         jnp.asarray(h[i : i + batch_size]))
-                )
+                hb = jnp.asarray(h[i : i + batch_size])
+                with dispatch_guard(self.config.strict):
+                    outs.append(
+                        head(self.state.layers, self.state.readout, hb)
+                    )
+            self._strict_check("predict")
             return jnp.concatenate(outs, axis=0)
         fwd = self._forward_fn()
         for i in range(0, x.shape[0], batch_size):
-            outs.append(
-                fwd(self.state.layers, self.state.readout,
-                    jnp.asarray(x[i : i + batch_size]))
-            )
+            xb = jnp.asarray(x[i : i + batch_size])
+            with dispatch_guard(self.config.strict):
+                outs.append(fwd(self.state.layers, self.state.readout, xb))
+        self._strict_check("predict")
         return jnp.concatenate(outs, axis=0)
 
     def evaluate(self, dataset, batch_size: int = 1024) -> float:
         """Classification accuracy (argmax over output units)."""
         x, y = dataset
         scores = self.predict(x, batch_size=batch_size)
+        # jaxlint: allow[JL001] reason=accuracy is a host-side API result; one readback per evaluate
         pred = np.asarray(jnp.argmax(scores, axis=-1))
-        return float(np.mean(pred == np.asarray(y)))
+        return float(np.mean(pred == np.asarray(y)))  # jaxlint: allow[JL001] reason=labels are compared host-side once per evaluate
 
     # ------------------------------------------------------------- training
     def fit(
@@ -307,6 +347,7 @@ class CompiledNetwork:
             dataset, epochs_hidden, epochs_readout, batch_size, readout,
             readout_lr, shuffle, verbose, history, reset_readout=True,
         )
+        self._strict_check("fit")
         return FitResult(
             epochs_hidden=epochs_hidden,
             epochs_readout=epochs_readout,
@@ -343,6 +384,7 @@ class CompiledNetwork:
             readout or "bcpnn", readout_lr, shuffle, verbose, history,
             reset_readout=False,
         )
+        self._strict_check("partial_fit")
         return FitResult(
             epochs_hidden=1,
             epochs_readout=1 if readout is not None else 0,

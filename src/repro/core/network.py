@@ -137,7 +137,7 @@ class Network:
             raise ValueError("Network has no layers")
         key = jax.random.PRNGKey(self.seed)
         keys = jax.random.split(key, len(self.layers))
-        self.states = [l.init(k) for l, k in zip(self.layers, keys)]
+        self.states = [layer.init(k) for layer, k in zip(self.layers, keys)]
         self._built = True
         return self
 
@@ -156,7 +156,7 @@ class Network:
 
     @property
     def hidden_layers(self) -> List[StructuralPlasticityLayer]:
-        return [l for l in self.layers if isinstance(l, StructuralPlasticityLayer)]
+        return [la for la in self.layers if isinstance(la, StructuralPlasticityLayer)]
 
     @property
     def readout_layer(self) -> Optional[DenseLayer]:

@@ -114,8 +114,9 @@ def update_mask(
         return new_col
 
     mask = plast.hcu_mask
+    swap_cols = jax.vmap(swap_once, in_axes=(1, 1), out_axes=1)
     for _ in range(n_swaps):
-        mask = jax.vmap(swap_once, in_axes=(1, 1), out_axes=1)(mask, scores)
+        mask = swap_cols(mask, scores)
     return PlasticityState(hcu_mask=mask)
 
 

@@ -70,6 +70,10 @@ class _LRUCells:
             self._d.popitem(last=False)
             self.evictions += 1
 
+    def items(self):
+        """(key, cell) pairs, LRU-first (for the strict-mode sentinel)."""
+        return list(self._d.items())
+
     def __len__(self) -> int:
         return len(self._d)
 

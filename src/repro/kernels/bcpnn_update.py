@@ -101,6 +101,7 @@ def bcpnn_update_cij_w(
 
     nb = bp // bt
     grid = (fp // ft, hp // ht, nb)  # batch contraction innermost
+    # jaxlint: allow[JL001] reason=lam is in static_argnames — a Python float at trace time, not a device value
     kernel = functools.partial(_kernel, nb, float(lam), 1.0 / b)
     cij_new, w = pl.pallas_call(
         kernel,

@@ -64,7 +64,6 @@ def bcpnn_update(
     """
     from repro.core.learning import EPS, MarginalState
 
-    b_sz = ai.shape[0]
     one_m = 1.0 - lam
     # Vector EWMAs (O(F+H), wrapper-side).
     ci_new = one_m * marginals.ci + lam * jnp.mean(ai.astype(jnp.float32), axis=0)

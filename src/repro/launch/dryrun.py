@@ -119,7 +119,7 @@ def _spec_tree(ctx: ShardCtx, shapes_tree, logical_tree):
     from jax.sharding import NamedSharding
 
     return jax.tree_util.tree_map(
-        lambda s, l: NamedSharding(ctx.mesh, ctx.spec(l.names, s.shape)),
+        lambda s, lg: NamedSharding(ctx.mesh, ctx.spec(lg.names, s.shape)),
         shapes_tree,
         logical_tree,
     )
@@ -356,7 +356,7 @@ def probe_suite(arch: str, shape_name: str):
     # Three sequence points so the per-layer fit can carry a CONSTANT term
     # (S-independent weight gathers) next to the linear and quadratic terms.
     return [
-        {"n_layers": l, "seq": s} for s in seqs for l in (la, lb)
+        {"n_layers": nl, "seq": s} for s in seqs for nl in (la, lb)
     ]
 
 

@@ -126,7 +126,7 @@ def extrapolate(
         return None
     la, lb = depths[0], depths[1]
     lays = [max((by[(lb, s)] - by[(la, s)]) / (lb - la), 0.0) for s in seqs]
-    bases = [max(by[(la, s)] - la * l, 0.0) for s, l in zip(seqs, lays)]
+    bases = [max(by[(la, s)] - la * lay, 0.0) for s, lay in zip(seqs, lays)]
     delta, gamma = _fit_linear(seqs, bases)
     w, alpha, beta = _fit_layer(seqs, lays)
 

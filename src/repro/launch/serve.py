@@ -62,6 +62,11 @@ def main():
         "--full", dest="smoke", action="store_false",
         help="the real architecture config",
     )
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="strict verification: transfer guard on fused dispatches plus "
+             "a recompile sentinel over prefill/decode traces",
+    )
     ap.set_defaults(smoke=True)
     args = ap.parse_args()
 
@@ -79,6 +84,7 @@ def main():
             policy=args.policy,
             max_queue=args.max_queue,
             async_mode=args.async_mode,
+            strict=args.strict,
         ),
     )
     rng = np.random.default_rng(0)

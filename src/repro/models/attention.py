@@ -91,7 +91,7 @@ def chunked_attention(
         q_pos = q_offset + qi * qc + jnp.arange(qc)
 
         def kv_step(carry, ki_kv):
-            m, l, acc = carry
+            m, lse, acc = carry
             ki, kx, vx = ki_kv
             kv_pos = ki * kc + jnp.arange(kc)
             s = jnp.einsum(
@@ -101,22 +101,22 @@ def chunked_attention(
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             corr = jnp.exp(m - m_new)
             p = jnp.exp(s - m_new[..., None])
-            l = l * corr + jnp.sum(p, axis=-1)
+            lse = lse * corr + jnp.sum(p, axis=-1)
             pv = jnp.einsum(
                 "bhgqk,bkhd->bhgqd", p.astype(qx.dtype), vx,
                 preferred_element_type=jnp.float32,
             )
             acc = acc * corr[..., None] + pv
-            return (m_new, l, acc), None
+            return (m_new, lse, acc), None
 
         m0 = jnp.full((b, kh, g, qc), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, kh, g, qc), jnp.float32)
         a0 = jnp.zeros((b, kh, g, qc, dv), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lse, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs),
             unroll=True if unroll else 1,
         )
-        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B,KH,G,qc,Dv)
+        out = acc / jnp.maximum(lse[..., None], 1e-30)  # (B,KH,G,qc,Dv)
         return None, jnp.moveaxis(out, 3, 1)  # (B,qc,KH,G,Dv)
 
     _, outs = jax.lax.scan(

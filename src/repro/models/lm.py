@@ -124,7 +124,7 @@ class CausalLM:
 
         def stacked(tree):
             return jax.tree_util.tree_map(
-                lambda l: L("layer", *l.names), tree,
+                lambda lg: L("layer", *lg.names), tree,
                 is_leaf=lambda x: isinstance(x, L),
             )
 
@@ -428,7 +428,6 @@ class CausalLM:
         """One serving step: append token, attend, return (logits (B,V), cache)."""
         cfg, ctx = self.cfg, self.ctx
         x = embed_tokens(params["embed"], token, cfg)  # (B,1,d)
-        positions = jnp.reshape(cur_len, (1,))
         fam = cfg.family
 
         if fam in ("dense", "vlm", "moe"):
@@ -482,7 +481,6 @@ class CausalLM:
                     f = mlp_apply(p_l["mlp"], h2, cfg.act, ctx)
                 return h + f, {"ckv": ckv, "krope": krope}
 
-            stacks = []
             if cfg.first_dense_layers:
                 fd = cfg.first_dense_layers
                 c_dense = jax.tree_util.tree_map(lambda a: a[:fd], cache)
@@ -768,7 +766,7 @@ class EncDecLM:
 
         def stacked(tree):
             return jax.tree_util.tree_map(
-                lambda l: L("layer", *l.names), tree,
+                lambda lg: L("layer", *lg.names), tree,
                 is_leaf=lambda x: isinstance(x, L),
             )
 

@@ -253,7 +253,6 @@ def mamba2_decode_step(
 
     xbc = jnp.concatenate([xi, bm, cm], axis=-1)[:, 0]  # (B, C)
     conv_hist = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)
-    k = params["conv_w"].shape[0]
     w = params["conv_w"].astype(dt_)
     conv_out = (
         jnp.sum(conv_hist * w[None], axis=1) + params["conv_b"].astype(dt_)

@@ -49,7 +49,9 @@ def get_format(name: str) -> BFFormat:
     try:
         return FORMATS[name.lower()]
     except KeyError:
-        raise ValueError(f"unknown format {name!r}; have {sorted(FORMATS)}")
+        raise ValueError(
+            f"unknown format {name!r}; have {sorted(FORMATS)}"
+        ) from None
 
 
 def round_to(x: jnp.ndarray, fmt: BFFormat, use_kernel: bool = True) -> jnp.ndarray:

@@ -194,7 +194,10 @@ class ActivationStore:
         n_full, rem = divmod(n, chunk)
         parts = []
         if n_full:
-            xs = self._as_chunks(base, n_full, chunk)
+            # Stage host chunks explicitly: the jitted scan must never be
+            # the implicit h2d boundary (strict mode's transfer guard
+            # disallows it; a no-op for device-resident bases).
+            xs = jnp.asarray(self._as_chunks(base, n_full, chunk))
             ys = self._scan_fn(j, k)(frozen, xs)
             parts.append(ys.reshape(n_full * chunk, *ys.shape[2:]))
         if rem:

@@ -36,6 +36,7 @@ from typing import Any, Callable, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.strict import dispatch_guard
 from repro.runtime.epoch_engine import (
     epoch_sharding,
     forward_stack,
@@ -56,11 +57,17 @@ class ExecutionPlan:
 
     name: str = "?"
 
-    def __init__(self, layers: Sequence[Any], donate: bool = True):
+    def __init__(self, layers: Sequence[Any], donate: bool = True,
+                 strict: bool = False):
         from repro.core.layers import DenseLayer, StructuralPlasticityLayer
 
         self.layers: List[Any] = list(layers)
         self.donate = donate
+        self.strict = strict
+        # name -> jitted callable, for the strict-mode recompile sentinel.
+        # Every compiled callable this plan builds registers here, so
+        # CompiledNetwork can assert each one compiles exactly once.
+        self.jitted: dict = {}
         self.trainer = None
         self._hidden_cache: dict = {}
         self._hidden_step_cache: dict = {}
@@ -72,7 +79,7 @@ class ExecutionPlan:
     # ------------------------------------------------------------ structure
     @property
     def hidden_layers(self) -> List[Any]:
-        return [l for l in self.layers if isinstance(l, self._plastic_cls)]
+        return [la for la in self.layers if isinstance(la, self._plastic_cls)]
 
     @property
     def readout_layer(self) -> Optional[Any]:
@@ -112,6 +119,7 @@ class ExecutionPlan:
             else:
                 fn = jax.jit(lambda s, xb, _l=layer: _l.train_batch(s, xb)[0])
             self._hidden_step_cache[li] = fn
+            self.jitted[f"hidden_step[{li}]"] = fn
         return fn
 
     # ----------------------------------------------------------- interface
@@ -160,10 +168,12 @@ class ScanPlan(ExecutionPlan):
             epoch_fn = hidden_epoch_fn(
                 layer, self.layers[:li], step_fn=step, donate=self.donate
             )
+            self.jitted[f"hidden_epoch[{li}]"] = epoch_fn
 
             def run(state, below_states, x, idx, batch_size):
                 xs = self._stack(x, idx, batch_size)
-                return epoch_fn(state, below_states, xs)
+                with dispatch_guard(self.strict):
+                    return epoch_fn(state, below_states, xs)
 
             self._hidden_cache[li] = run
         return run
@@ -176,11 +186,13 @@ class ScanPlan(ExecutionPlan):
             epoch_fn = readout_epoch_fn(
                 layer, self.layers[:li], step_fn=step, donate=self.donate
             )
+            self.jitted["readout_epoch"] = epoch_fn
 
             def run(state, hidden_states, x, y, idx, batch_size):
                 xs = self._stack(x, idx, batch_size)
                 ys = self._stack(y, idx, batch_size)
-                return epoch_fn(state, hidden_states, xs, ys)
+                with dispatch_guard(self.strict):
+                    return epoch_fn(state, hidden_states, xs, ys)
 
             self._readout_cache = run
         return self._readout_cache
@@ -189,13 +201,15 @@ class ScanPlan(ExecutionPlan):
         epoch_fn = sgd_epoch_fn(
             opt, self.hidden_layers, loss_fn, donate=self.donate
         )
+        self.jitted["sgd_epoch"] = epoch_fn
 
         def run(params, opt_state, hidden_states, x, y, idx, batch_size):
             xs = self._stack(x, idx, batch_size)
             ys = self._stack(y, idx, batch_size)
-            params, opt_state, losses = epoch_fn(
-                params, opt_state, hidden_states, xs, ys
-            )
+            with dispatch_guard(self.strict):
+                params, opt_state, losses = epoch_fn(
+                    params, opt_state, hidden_states, xs, ys
+                )
             return params, opt_state, losses[-1]
 
         return run
@@ -209,9 +223,12 @@ class ScanPlan(ExecutionPlan):
             epoch_fn = hidden_epoch_cached_fn(
                 layer, step_fn=step, donate=self.donate
             )
+            self.jitted[f"hidden_epoch_cached[{li}]"] = epoch_fn
 
             def run(state, xk, idx, batch_size):
-                return epoch_fn(state, self._stack(xk, idx, batch_size))
+                xs = self._stack(xk, idx, batch_size)
+                with dispatch_guard(self.strict):
+                    return epoch_fn(state, xs)
 
             self._hidden_cache[("cached", li)] = run
         return run
@@ -223,22 +240,26 @@ class ScanPlan(ExecutionPlan):
             epoch_fn = readout_epoch_cached_fn(
                 layer, step_fn=step, donate=self.donate
             )
+            self.jitted["readout_epoch_cached"] = epoch_fn
 
             def run(state, hk, y, idx, batch_size):
                 hs = self._stack(hk, idx, batch_size)
                 ys = self._stack(y, idx, batch_size)
-                return epoch_fn(state, hs, ys)
+                with dispatch_guard(self.strict):
+                    return epoch_fn(state, hs, ys)
 
             self._readout_cached = run
         return self._readout_cached
 
     def sgd_epoch_cached(self, opt, loss_fn: Callable) -> Callable:
         epoch_fn = sgd_epoch_cached_fn(opt, loss_fn, donate=self.donate)
+        self.jitted["sgd_epoch_cached"] = epoch_fn
 
         def run(params, opt_state, hk, y, idx, batch_size):
             hs = self._stack(hk, idx, batch_size)
             ys = self._stack(y, idx, batch_size)
-            params, opt_state, losses = epoch_fn(params, opt_state, hs, ys)
+            with dispatch_guard(self.strict):
+                params, opt_state, losses = epoch_fn(params, opt_state, hs, ys)
             return params, opt_state, losses[-1]
 
         return run
@@ -252,7 +273,9 @@ class BatchPlan(ExecutionPlan):
     name = "batch"
 
     def _below_fn(self, upto: int) -> Callable:
-        return jax.jit(forward_stack(self.layers[:upto]))
+        fn = jax.jit(forward_stack(self.layers[:upto]))
+        self.jitted[f"below[{upto}]"] = fn
+        return fn
 
     def hidden_epoch(self, li: int) -> Callable:
         run = self._hidden_cache.get(li)
@@ -261,11 +284,12 @@ class BatchPlan(ExecutionPlan):
             below = self._below_fn(li)
 
             def run(state, below_states, x, idx, batch_size):
-                for b in range(0, idx.shape[0], batch_size):
-                    xb = jnp.asarray(x[idx[b : b + batch_size]])
-                    if below_states:
-                        xb = below(below_states, xb)
-                    state = step(state, xb)
+                with dispatch_guard(self.strict):
+                    for b in range(0, idx.shape[0], batch_size):
+                        xb = gather_batch(x, idx[b : b + batch_size])
+                        if below_states:
+                            xb = below(below_states, xb)
+                        state = step(state, xb)
                 return state
 
             self._hidden_cache[li] = run
@@ -281,13 +305,15 @@ class BatchPlan(ExecutionPlan):
                 step = jax.jit(
                     lambda s, hb, yb, _l=layer: _l.train_batch(s, hb, yb)[0]
                 )
+            self.jitted["readout_step"] = step
             below = self._below_fn(li)
 
             def run(state, hidden_states, x, y, idx, batch_size):
-                for b in range(0, idx.shape[0], batch_size):
-                    sel = idx[b : b + batch_size]
-                    hb = below(hidden_states, jnp.asarray(x[sel]))
-                    state = step(state, hb, jnp.asarray(y[sel]))
+                with dispatch_guard(self.strict):
+                    for b in range(0, idx.shape[0], batch_size):
+                        sel = idx[b : b + batch_size]
+                        hb = below(hidden_states, gather_batch(x, sel))
+                        state = step(state, hb, gather_batch(y, sel))
                 return state
 
             self._readout_cache = run
@@ -303,14 +329,17 @@ class BatchPlan(ExecutionPlan):
             p = jax.tree_util.tree_map(lambda a, u: a + u, p, updates)
             return p, s, loss
 
+        self.jitted["sgd_step"] = step
+
         def run(params, opt_state, hidden_states, x, y, idx, batch_size):
             loss = jnp.zeros(())
-            for b in range(0, idx.shape[0], batch_size):
-                sel = idx[b : b + batch_size]
-                hb = below(hidden_states, jnp.asarray(x[sel]))
-                params, opt_state, loss = step(
-                    params, opt_state, hb, jnp.asarray(y[sel])
-                )
+            with dispatch_guard(self.strict):
+                for b in range(0, idx.shape[0], batch_size):
+                    sel = idx[b : b + batch_size]
+                    hb = below(hidden_states, gather_batch(x, sel))
+                    params, opt_state, loss = step(
+                        params, opt_state, hb, gather_batch(y, sel)
+                    )
             return params, opt_state, loss
 
         return run
@@ -325,8 +354,11 @@ class BatchPlan(ExecutionPlan):
             step = self.hidden_step(li)
 
             def run(state, xk, idx, batch_size):
-                for b in range(0, idx.shape[0], batch_size):
-                    state = step(state, gather_batch(xk, idx[b : b + batch_size]))
+                with dispatch_guard(self.strict):
+                    for b in range(0, idx.shape[0], batch_size):
+                        state = step(
+                            state, gather_batch(xk, idx[b : b + batch_size])
+                        )
                 return state
 
             self._hidden_cache[("cached", li)] = run
@@ -341,11 +373,15 @@ class BatchPlan(ExecutionPlan):
                 step = jax.jit(
                     lambda s, hb, yb, _l=layer: _l.train_batch(s, hb, yb)[0]
                 )
+            self.jitted["readout_step_cached"] = step
 
             def run(state, hk, y, idx, batch_size):
-                for b in range(0, idx.shape[0], batch_size):
-                    sel = idx[b : b + batch_size]
-                    state = step(state, gather_batch(hk, sel), gather_batch(y, sel))
+                with dispatch_guard(self.strict):
+                    for b in range(0, idx.shape[0], batch_size):
+                        sel = idx[b : b + batch_size]
+                        state = step(
+                            state, gather_batch(hk, sel), gather_batch(y, sel)
+                        )
                 return state
 
             self._readout_cached = run
@@ -359,13 +395,17 @@ class BatchPlan(ExecutionPlan):
             p = jax.tree_util.tree_map(lambda a, u: a + u, p, updates)
             return p, s, loss
 
+        self.jitted["sgd_step_cached"] = step
+
         def run(params, opt_state, hk, y, idx, batch_size):
             loss = jnp.zeros(())
-            for b in range(0, idx.shape[0], batch_size):
-                sel = idx[b : b + batch_size]
-                params, opt_state, loss = step(
-                    params, opt_state, gather_batch(hk, sel), gather_batch(y, sel)
-                )
+            with dispatch_guard(self.strict):
+                for b in range(0, idx.shape[0], batch_size):
+                    sel = idx[b : b + batch_size]
+                    params, opt_state, loss = step(
+                        params, opt_state,
+                        gather_batch(hk, sel), gather_batch(y, sel),
+                    )
             return params, opt_state, loss
 
         return run
@@ -374,11 +414,12 @@ class BatchPlan(ExecutionPlan):
 PLANS = {ScanPlan.name: ScanPlan, BatchPlan.name: BatchPlan}
 
 
-def make_plan(engine: str, layers: Sequence[Any], donate: bool = True) -> ExecutionPlan:
+def make_plan(engine: str, layers: Sequence[Any], donate: bool = True,
+              strict: bool = False) -> ExecutionPlan:
     try:
         cls = PLANS[engine]
     except KeyError:
         raise ValueError(
             f"Unknown engine {engine!r} (want one of {sorted(PLANS)})"
         ) from None
-    return cls(layers, donate=donate)
+    return cls(layers, donate=donate, strict=strict)

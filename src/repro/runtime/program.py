@@ -188,9 +188,19 @@ def run_program(
 
 def _timed(history: List[dict], entry: dict, t0: float, result) -> None:
     """Record one history entry with its blocked wall-time."""
+    # jaxlint: allow[JL001] reason=phase timing telemetry must block once at the phase boundary
     jax.block_until_ready(result)
     entry["seconds"] = time.perf_counter() - t0
     history.append(entry)
+
+
+def _check_finite(net, tree, where: str) -> None:
+    """Strict-mode checkify guard on a freshly-updated state pytree — the
+    BCPNN EWMA traces and log-ratio weights are where a runaway learning
+    rate or zero marginal first shows up as NaN/Inf.  No-op unless the
+    network was compiled with ``ExecutionConfig(strict=True)``."""
+    if getattr(net, "_finite_check", None) is not None:
+        net._finite_check(tree, where=where)
 
 
 def _phase_input(net, level: int, states, x, batch_size, history):
@@ -225,6 +235,7 @@ def _run_hidden_phase(
         t0 = time.perf_counter()
         idx = net._epoch_indices(n, n_total, shuffle)
         state = step(state, idx)
+        _check_finite(net, state, f"hidden layer {li}, epoch {epoch}")
         _timed(history, {"phase": f"hidden{li}", "epoch": epoch}, t0, state)
         if verbose:
             print(
@@ -261,6 +272,7 @@ def _run_bcpnn_phase(
         t0 = time.perf_counter()
         idx = net._epoch_indices(n, n_total, shuffle)
         state = step(state, idx)
+        _check_finite(net, state, f"bcpnn readout epoch {epoch}")
         _timed(history, {"phase": "readout", "epoch": epoch}, t0, state)
         if verbose:
             print(
@@ -289,6 +301,7 @@ def _run_sgd_phase(
         t0 = time.perf_counter()
         idx = net._epoch_indices(n, n_total, shuffle)
         params, opt_state, loss = step(params, opt_state, idx)
+        _check_finite(net, params, f"sgd readout epoch {epoch}")
         _timed(history, {"phase": "sgd_readout", "epoch": epoch}, t0, params)
         if verbose:
             print(

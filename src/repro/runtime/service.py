@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from collections import OrderedDict, deque
 from typing import Any, Deque, Dict, List, Optional, Tuple
@@ -75,6 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.strict import RecompileSentinel, dispatch_guard
 from repro.core.streaming import _LRUCells
 from repro.runtime.metrics import ServiceMetrics
 
@@ -159,6 +161,12 @@ class ServiceConfig:
                 new requests mid-flight (continuous batching).  For
                 streaming plans the async surface serves per-item
                 INFERENCE (sync submit+drain feeds training samples).
+    strict:     runtime hot-path verification (repro.analysis.strict): the
+                fused decode step and the batched head dispatch run under
+                jax.transfer_guard("disallow"), and a recompile sentinel
+                asserts the plan's jitted callables compile exactly once
+                across repeated submit/predict/generate rounds (new prefill
+                buckets get their own baseline).
     """
 
     max_batch: int = 4
@@ -171,6 +179,7 @@ class ServiceConfig:
     max_queue: Optional[int] = None
     layer: int = 0
     async_mode: bool = False
+    strict: bool = False
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -216,7 +225,10 @@ class ServePlan:
     """Base serving strategy.  Subclasses implement the capability they
     serve; calling an unsupported capability raises with the plan name.
     Every plan owns a :class:`ServiceMetrics` bundle (shared with the
-    service front door and the async engine)."""
+    service front door and the async engine) and a ``_lock`` guarding its
+    stat counters — the async engine's executor thread mutates them while
+    caller threads read ``stats`` (the same discipline ``metrics.py``
+    follows, enforced by jaxlint JL004)."""
 
     name: str = "?"
 
@@ -224,6 +236,22 @@ class ServePlan:
                  metrics: Optional[ServiceMetrics] = None):
         self.config = config
         self.metrics = metrics if metrics is not None else ServiceMetrics()
+        self._lock = threading.Lock()
+        # Strict-mode recompile sentinel over this plan's jitted callables
+        # (repro.analysis.strict); None unless ``config.strict``.
+        self._sentinel = RecompileSentinel() if config.strict else None
+
+    def _strict_registry(self) -> Dict[str, Any]:
+        """name -> jitted callable, re-collected at every check (registries
+        grow: new prefill buckets, lazily-built heads)."""
+        return {}
+
+    def _strict_check(self, where: str) -> None:
+        if self._sentinel is None:
+            return
+        for name, fn in self._strict_registry().items():
+            self._sentinel.watch(name, fn)
+        self._sentinel.check(where)
 
     def _unsupported(self, what: str):
         raise NotImplementedError(
@@ -303,16 +331,30 @@ class BatchedPlan(ServePlan):
         hit = self._canon.get(key)
         if hit is not None:
             self._canon.move_to_end(key)
-            self._reuse_hits += 1
+            with self._lock:
+                self._reuse_hits += 1
             return hit
         # Anchor a PRIVATE copy, never a view of the caller's array: the
         # digest->anchor mapping (and the store's identity-keyed projection)
         # must survive the caller mutating their buffer in place.
+        # jaxlint: allow[JL001] reason=private host-side anchor copy for the digest cache; no device involved
         anchor = np.array(xb, copy=True)
         self._canon[key] = anchor
         while len(self._canon) > self._CANON_CAPACITY:
             self._canon.popitem(last=False)
         return anchor
+
+    def _strict_registry(self) -> Dict[str, Any]:
+        reg: Dict[str, Any] = {"forward": self._fwd}
+        if self.compiled._head is not None:
+            reg["head"] = self.compiled._head
+        store = self.compiled.activations
+        if store is not None:
+            for (j, k), fn in store._proj_scan.items():
+                reg[f"proj_scan[{j}->{k}]"] = fn
+            for (j, k), fn in store._proj_chunk.items():
+                reg[f"proj_chunk[{j}->{k}]"] = fn
+        return reg
 
     def _scores(self, xb: np.ndarray) -> jnp.ndarray:
         """One padded chunk -> class scores, through the shared head."""
@@ -324,12 +366,16 @@ class BatchedPlan(ServePlan):
             h = compiled.activations.level(
                 n_hidden, list(state.layers), xb, chunk=xb.shape[0]
             )
-            return compiled._head_fn()(
-                state.layers, state.readout, jnp.asarray(h)
-            )
-        return self._fwd(state.layers, state.readout, jnp.asarray(xb))
+            head = compiled._head_fn()
+            hd = jnp.asarray(h)
+            with dispatch_guard(self.config.strict):
+                return head(state.layers, state.readout, hd)
+        xd = jnp.asarray(xb)
+        with dispatch_guard(self.config.strict):
+            return self._fwd(state.layers, state.readout, xd)
 
     def predict(self, x) -> jnp.ndarray:
+        # jaxlint: allow[JL001] reason=host-side input normalization before bucket padding; the h2d boundary is _scores
         x = np.asarray(x)
         if x.ndim == 1:
             x = x[None, :]
@@ -343,23 +389,29 @@ class BatchedPlan(ServePlan):
                 xb = np.concatenate(
                     [xb, np.zeros((m - n,) + xb.shape[1:], xb.dtype)], axis=0
                 )
-                self._padded_rows += m - n
+                with self._lock:
+                    self._padded_rows += m - n
             t0 = time.perf_counter()
+            # jaxlint: allow[JL001] reason=per-chunk latency telemetry blocks once at the dispatch boundary
             scores = jax.block_until_ready(self._scores(xb))
             self.metrics.batch_s.observe(time.perf_counter() - t0)
             outs.append(scores[:n])
-            self._rows += n
-        self._requests += 1
+            with self._lock:
+                self._rows += n
+        with self._lock:
+            self._requests += 1
+        self._strict_check("predict")
         return jnp.concatenate(outs, axis=0)
 
     @property
     def stats(self) -> Dict[str, Any]:
-        return {
-            "requests": self._requests,
-            "rows": self._rows,
-            "padded_rows": self._padded_rows,
-            "projection_reuse_hits": self._reuse_hits,
-        }
+        with self._lock:
+            return {
+                "requests": self._requests,
+                "rows": self._rows,
+                "padded_rows": self._padded_rows,
+                "projection_reuse_hits": self._reuse_hits,
+            }
 
 
 class DecodeSession:
@@ -408,7 +460,8 @@ class DecodeSession:
             "steps": 1,
             "tag": tag,
         }
-        plan._requests += 1
+        plan._count_admit()
+        plan._strict_check("prefill/admit")
         return True
 
     def step(self) -> List[Tuple[Any, Completion]]:
@@ -438,13 +491,14 @@ class DecodeSession:
                         st["tag"],
                         Completion(
                             rid=req.rid,
+                            # jaxlint: allow[JL001] reason=token list is host data already; no device transfer
                             tokens=np.asarray(st["tokens"], np.int32),
                             prefill_len=len(req.prompt),
                             steps=st["steps"],
                         ),
                     )
                 )
-                plan._tokens += len(st["tokens"])
+                plan._count_retired(len(st["tokens"]))
                 self.active[slot] = None
                 continue
             advancing.append(slot)
@@ -462,10 +516,13 @@ class DecodeSession:
             tokens[slot] = self.active[slot]["tokens"][-1]
             cur_lens[slot] = self.active[slot]["cur_len"]
         t0 = time.perf_counter()
-        nxt, self.caches = plan._fused(
-            plan.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(cur_lens),
-        )
+        toks_d = jnp.asarray(tokens)
+        lens_d = jnp.asarray(cur_lens)
+        with dispatch_guard(plan.config.strict):
+            nxt, self.caches = plan._fused(
+                plan.params, self.caches, toks_d, lens_d
+            )
+        # jaxlint: allow[JL001] reason=greedy tokens steer EOS/admission host-side; ONE d2h per fused step by design
         nxt = np.asarray(nxt)
         plan.metrics.decode_step_s.observe(time.perf_counter() - t0)
         for slot in advancing:
@@ -473,8 +530,8 @@ class DecodeSession:
             st["tokens"].append(int(nxt[slot]))
             st["cur_len"] += 1
             st["steps"] += 1
-        plan._fused_steps += 1
-        plan._slot_steps += len(advancing)
+        plan._count_step(len(advancing))
+        plan._strict_check("decode step")
         return done
 
 
@@ -519,6 +576,34 @@ class DecodePlan(ServePlan):
         self._slot_steps = 0
         self._requests = 0
         self._tokens = 0
+
+    # ------------------------------------------------------- stat counters
+    # DecodeSession (driven by the engine's executor thread) counts through
+    # these, so every mutation shares one lock with the ``stats`` reader.
+    def _count_admit(self) -> None:
+        with self._lock:
+            self._requests += 1
+
+    def _count_retired(self, n_tokens: int) -> None:
+        with self._lock:
+            self._tokens += n_tokens
+
+    def _count_step(self, n_slots: int) -> None:
+        with self._lock:
+            self._fused_steps += 1
+            self._slot_steps += n_slots
+
+    def _strict_registry(self) -> Dict[str, Any]:
+        reg: Dict[str, Any] = {
+            "fused_step": self._fused,
+            "write_slot": self._write,
+        }
+        # Per-bucket prefill cells are separate callables: a NEW bucket gets
+        # its own baseline (expected trace), the SAME bucket re-tracing is a
+        # violation.
+        for m, cell in self._prefill_cells.items():
+            reg[f"prefill[{m}]"] = cell
+        return reg
 
     # ---------------------------------------------------------- jit bodies
     def _fused_step(self, params, caches, tokens, cur_lens):
@@ -571,12 +656,12 @@ class DecodePlan(ServePlan):
         # last_pos gathers logits at the true prompt end: causal attention
         # makes positions <= last_pos independent of right-padding, so the
         # bucketed prefill is bit-identical to an exact-length one.
-        logits, cache = cell(
-            self.params,
-            {"tokens": jnp.asarray(tokens),
-             "last_pos": jnp.asarray(n - 1, jnp.int32)},
-        )
+        batch = {"tokens": jnp.asarray(tokens),
+                 "last_pos": jnp.asarray(n - 1, jnp.int32)}
+        with dispatch_guard(self.config.strict):
+            logits, cache = cell(self.params, batch)
         cache = pad_cache_like(cache, self._cache_template)
+        # jaxlint: allow[JL001] reason=first token steers admission host-side; one sync per prefill
         first = int(jnp.argmax(logits[0]))
         self.metrics.prefill_s.observe(time.perf_counter() - t0)
         return first, cache
@@ -602,17 +687,20 @@ class DecodePlan(ServePlan):
 
     @property
     def stats(self) -> Dict[str, Any]:
-        return {
-            "requests": self._requests,
-            "tokens_generated": self._tokens,
-            "fused_steps": self._fused_steps,
-            "slot_steps": self._slot_steps,
-            "mean_occupancy": (
-                self._slot_steps / self._fused_steps if self._fused_steps else 0.0
-            ),
-            "prefill_cells": len(self._prefill_cells),
-            "prefill_cell_evictions": self._prefill_cells.evictions,
-        }
+        with self._lock:
+            return {
+                "requests": self._requests,
+                "tokens_generated": self._tokens,
+                "fused_steps": self._fused_steps,
+                "slot_steps": self._slot_steps,
+                "mean_occupancy": (
+                    self._slot_steps / self._fused_steps
+                    if self._fused_steps
+                    else 0.0
+                ),
+                "prefill_cells": len(self._prefill_cells),
+                "prefill_cell_evictions": self._prefill_cells.evictions,
+            }
 
 
 class StreamingPlan(ServePlan):
@@ -788,6 +876,7 @@ class InferenceService:
             self.plan.flush()
             out = None
         else:
+            # jaxlint: allow[JL001] reason=submitted items are host objects; staging them is the h2d boundary
             out = self.plan.predict(np.stack([np.asarray(s) for s in items]))
         end = time.perf_counter()
         for t in stamps:

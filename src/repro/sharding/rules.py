@@ -164,7 +164,7 @@ class L:
 def param_specs(ctx: ShardCtx, params, logical_tree):
     """PartitionSpec pytree for params given a mirroring tree of L leaves."""
     return jax.tree_util.tree_map(
-        lambda p, l: ctx.spec(l.names, jnp.shape(p)), params, logical_tree
+        lambda p, lg: ctx.spec(lg.names, jnp.shape(p)), params, logical_tree
     )
 
 
@@ -173,7 +173,7 @@ def param_shardings(ctx: ShardCtx, params, logical_tree):
     if ctx.mesh is None:
         return None
     return jax.tree_util.tree_map(
-        lambda p, l: NamedSharding(ctx.mesh, ctx.spec(l.names, jnp.shape(p))),
+        lambda p, lg: NamedSharding(ctx.mesh, ctx.spec(lg.names, jnp.shape(p))),
         params,
         logical_tree,
     )

@@ -1,0 +1,539 @@
+"""The hot-path guard: jaxlint static rules (JL000-JL004), waiver mechanics,
+the repo-wide dogfood gate, and strict runtime verification — compile-once
+invariants across repeated fit/evaluate/submit rounds, seeded violations
+(shape change, implicit host transfer, non-finite update), and bit-exact
+strict/non-strict parity on a training and a serving path."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import lint_source
+from repro.analysis.strict import (
+    HostTransferError,
+    NonFiniteError,
+    RecompileError,
+    RecompileSentinel,
+    dispatch_guard,
+    finite_checker,
+)
+from repro.core import (
+    DenseLayer,
+    ExecutionConfig,
+    Network,
+    StructuralPlasticityLayer,
+    UnitLayout,
+    onehot_layout,
+)
+from repro.data import complementary_code, mnist_like
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+HOT = "repro/runtime/service.py"  # any DEFAULT_HOT_MODULES entry
+
+
+def _lint(src, path="pkg/cold.py"):
+    return lint_source(textwrap.dedent(src), path)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ----------------------------------------------------------------- linting
+class TestJL001HostSync:
+    def test_item_in_scan_body_flagged(self):
+        findings = _lint(
+            """
+            import jax
+
+            def epoch(state, xs):
+                def body(carry, xb):
+                    carry = carry + xb.item()
+                    return carry, None
+                return jax.lax.scan(body, state, xs)
+            """
+        )
+        assert _rules(findings) == ["JL001"]
+        assert ".item()" in findings[0].message
+
+    def test_host_sync_in_jitted_decorated_fn(self):
+        findings = _lint(
+            """
+            import jax, numpy as np
+
+            @jax.jit
+            def step(s, xb):
+                return s + np.asarray(xb)
+            """
+        )
+        assert _rules(findings) == ["JL001"]
+
+    def test_float_cast_of_shape_is_static_and_clean(self):
+        findings = _lint(
+            """
+            import jax
+
+            @jax.jit
+            def step(s, xb):
+                return s * float(xb.shape[0]) + int(len(xb))
+            """
+        )
+        assert findings == []
+
+    def test_float_cast_of_traced_value_flagged(self):
+        findings = _lint(
+            """
+            import jax
+
+            @jax.jit
+            def step(s, xb):
+                return s * float(xb)
+            """
+        )
+        assert _rules(findings) == ["JL001"]
+
+    def test_hot_module_flags_module_level_transfers(self):
+        # Outside any traced function, but in a designated hot module.
+        findings = _lint(
+            """
+            import numpy as np
+
+            def gather(x, idx):
+                return np.asarray(x)[idx]
+            """,
+            path=HOT,
+        )
+        assert _rules(findings) == ["JL001"]
+
+    def test_cold_module_host_code_is_clean(self):
+        findings = _lint(
+            """
+            import numpy as np
+
+            def gather(x, idx):
+                return np.asarray(x)[idx]
+            """
+        )
+        assert findings == []
+
+    def test_hot_module_int_of_host_value_is_clean(self):
+        # int() over host-side data (no jnp/jax in the argument) is fine
+        # even on a hot module — only device-valued casts sync.
+        findings = _lint(
+            """
+            def count(tokens, slot):
+                return int(tokens[slot])
+            """,
+            path=HOT,
+        )
+        assert findings == []
+
+
+class TestJL002Donation:
+    def test_use_after_donate_flagged(self):
+        findings = _lint(
+            """
+            import jax
+
+            def train(state, xs):
+                epoch = jax.jit(lambda s, x: s, donate_argnums=(1,))
+                out = epoch(state, xs)
+                return out, xs.sum()
+            """
+        )
+        assert "JL002" in _rules(findings)
+        assert "xs" in [f.message.split("`")[1] for f in findings if f.rule == "JL002"]
+
+    def test_rebound_buffer_is_clean(self):
+        findings = _lint(
+            """
+            import jax
+
+            def train(state, xs):
+                epoch = jax.jit(lambda s, x: (s, x), donate_argnums=(1,))
+                state, xs = epoch(state, xs)
+                return state, xs.sum()
+            """
+        )
+        assert [f for f in findings if f.rule == "JL002"] == []
+
+
+class TestJL003Recompile:
+    def test_jit_inside_loop_flagged(self):
+        findings = _lint(
+            """
+            import jax
+
+            def sweep(layers, x):
+                outs = []
+                for layer in layers:
+                    outs.append(jax.jit(layer.fwd)(x))
+                return outs
+            """
+        )
+        assert _rules(findings) == ["JL003"]
+
+    def test_unhashable_static_arg_flagged(self):
+        findings = _lint(
+            """
+            import jax
+
+            def run(x):
+                f = jax.jit(lambda a, cfg: a, static_argnums=(1,))
+                return f(x, [1, 2, 3])
+            """
+        )
+        assert "JL003" in _rules(findings)
+
+    def test_closure_captured_mutable_flagged(self):
+        findings = _lint(
+            """
+            import jax
+
+            def make(x):
+                table = [1, 2, 3]
+
+                def body(a):
+                    return a + table[0]
+
+                return jax.jit(body)(x)
+            """
+        )
+        assert "JL003" in _rules(findings)
+
+    def test_hoisted_jit_is_clean(self):
+        findings = _lint(
+            """
+            import jax
+
+            def sweep(layers, x):
+                fns = [jax.jit(l.fwd) for l in layers]
+                outs = []
+                for fn in fns:
+                    outs.append(fn(x))
+                return outs
+            """
+        )
+        assert findings == []
+
+
+class TestJL004LockDiscipline:
+    SRC = """
+        import threading
+
+        class Plan{base}:
+            def __init__(self):
+                {lock}
+                self.count = 0
+
+            def bump(self):
+                {body}
+    """
+
+    def test_unlocked_write_in_lock_owning_class(self):
+        findings = _lint(
+            self.SRC.format(
+                base="", lock="self._lock = threading.Lock()",
+                body="self.count += 1",
+            )
+        )
+        assert _rules(findings) == ["JL004"]
+
+    def test_locked_write_is_clean(self):
+        findings = _lint(
+            self.SRC.format(
+                base="", lock="self._lock = threading.Lock()",
+                body="with self._lock:\n                    self.count += 1",
+            )
+        )
+        assert findings == []
+
+    def test_lockless_class_is_exempt(self):
+        findings = _lint(
+            self.SRC.format(base="", lock="pass", body="self.count += 1")
+        )
+        assert findings == []
+
+    def test_inherited_lock_enforced(self):
+        findings = _lint(
+            """
+            import threading
+
+            class Base:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+            class Child(Base):
+                def bump(self):
+                    self.count = 1
+            """
+        )
+        assert _rules(findings) == ["JL004"]
+
+
+class TestWaivers:
+    def test_waiver_suppresses_finding(self):
+        findings = _lint(
+            """
+            import numpy as np
+
+            def readback(scores):
+                return np.asarray(scores)  # jaxlint: allow[JL001] reason=api returns host arrays
+            """,
+            path=HOT,
+        )
+        assert findings == []
+
+    def test_own_line_waiver_covers_next_line(self):
+        findings = _lint(
+            """
+            import numpy as np
+
+            def readback(scores):
+                # jaxlint: allow[JL001] reason=api returns host arrays
+                return np.asarray(scores)
+            """,
+            path=HOT,
+        )
+        assert findings == []
+
+    def test_waiver_without_reason_is_jl000(self):
+        findings = _lint(
+            """
+            import numpy as np
+
+            def readback(scores):
+                return np.asarray(scores)  # jaxlint: allow[JL001]
+            """,
+            path=HOT,
+        )
+        assert "JL000" in _rules(findings)
+        assert "JL001" in _rules(findings)  # and the transfer is NOT waived
+
+    def test_unused_waiver_is_jl000(self):
+        findings = _lint(
+            """
+            def clean():
+                return 1  # jaxlint: allow[JL001] reason=nothing here
+            """,
+            path=HOT,
+        )
+        assert _rules(findings) == ["JL000"]
+        assert "matches no finding" in findings[0].message
+
+    def test_waiver_does_not_cover_other_rules(self):
+        findings = _lint(
+            """
+            import numpy as np
+
+            def readback(scores):
+                return np.asarray(scores)  # jaxlint: allow[JL004] reason=wrong rule
+            """,
+            path=HOT,
+        )
+        assert "JL001" in _rules(findings)
+
+
+class TestDogfood:
+    def test_jaxlint_src_exits_clean(self):
+        """The gate CI runs: the repo's own tree has no unwaived findings."""
+        proc = subprocess.run(
+            [sys.executable, os.path.join(REPO, "tools", "jaxlint"),
+             os.path.join(REPO, "src")],
+            capture_output=True, text=True, timeout=120,
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------------- fixtures
+@pytest.fixture(scope="module")
+def dataset():
+    ds = mnist_like(n_train=256, n_test=64, n_features=32, seed=0)
+    x, layout = complementary_code(ds.x_train)
+    return ds, x, layout
+
+
+def _build(layout, seed=0):
+    hidden = UnitLayout(4, 8)
+    net = Network(seed=seed)
+    net.add(
+        StructuralPlasticityLayer(
+            layout, hidden, fan_in=16, lam=0.05, init_jitter=1.0, gain=4.0
+        )
+    )
+    net.add(DenseLayer(hidden, onehot_layout(10), lam=0.05))
+    return net
+
+
+KW = dict(epochs_hidden=1, epochs_readout=1, batch_size=64)
+
+
+# ------------------------------------------------------- strict primitives
+class TestStrictPrimitives:
+    def test_dispatch_guard_blocks_implicit_transfer(self):
+        f = jax.jit(lambda a: a * 2)
+        with pytest.raises(HostTransferError, match="implicit host transfer"):
+            with dispatch_guard(True):
+                f(np.ones(4, np.float32))
+
+    def test_dispatch_guard_allows_explicit_staging(self):
+        import jax.numpy as jnp
+
+        f = jax.jit(lambda a: a * 2)
+        with dispatch_guard(True):
+            f(jnp.asarray(np.ones(4, np.float32)))
+
+    def test_dispatch_guard_disabled_is_noop(self):
+        f = jax.jit(lambda a: a * 2)
+        with dispatch_guard(False):
+            f(np.ones(4, np.float32))
+
+    def test_sentinel_baselines_then_raises_on_growth(self):
+        import jax.numpy as jnp
+
+        f = jax.jit(lambda a: a * 2)
+        s = RecompileSentinel()
+        s.watch("f", f)
+        f(jnp.ones(4))
+        s.check()
+        f(jnp.ones(4))  # warm hit: no growth
+        s.check()
+        f(jnp.ones(8))  # shape change: growth
+        with pytest.raises(RecompileError, match="'f' re-traced"):
+            s.check("probe")
+        s.rebaseline()
+        s.check()  # intentional change adopted
+
+    def test_finite_checker_names_the_leaf(self):
+        import jax.numpy as jnp
+
+        check = finite_checker()
+        check({"w": jnp.ones(3)}, "clean")
+        with pytest.raises(NonFiniteError, match="poisoned"):
+            check({"w": jnp.array([1.0, np.nan])}, "poisoned")
+
+
+# -------------------------------------------------- compile-once invariants
+class TestCompileOnce:
+    @pytest.mark.parametrize("engine", ["scan", "batch"])
+    def test_fit_evaluate_rounds_compile_once(self, dataset, engine):
+        """Two fit rounds + two evaluates: every jitted callable the network
+        owns traces exactly once (the sentinel would raise otherwise)."""
+        ds, x, layout = dataset
+        c = _build(layout).compile(ExecutionConfig(engine=engine, strict=True))
+        c.fit((x, ds.y_train), **KW)
+        c.fit((x, ds.y_train), **KW)
+        c.evaluate((x, ds.y_train))
+        c.evaluate((x, ds.y_train))
+        sizes = c._sentinel.sizes()
+        assert sizes, "sentinel watched nothing"
+        assert all(v <= 1 for v in sizes.values()), sizes
+
+    def test_strict_parity_with_default_mode(self, dataset):
+        """Strict mode must be observation-only: bit-identical accuracy."""
+        ds, x, layout = dataset
+        a = _build(layout).compile(ExecutionConfig(strict=True))
+        b = _build(layout).compile(ExecutionConfig())
+        a.fit((x, ds.y_train), **KW)
+        b.fit((x, ds.y_train), **KW)
+        assert a.evaluate((x, ds.y_train)) == b.evaluate((x, ds.y_train))
+
+
+# ------------------------------------------------------- seeded violations
+class TestSeededViolations:
+    def test_shape_changing_call_raises(self, dataset):
+        ds, x, layout = dataset
+        c = _build(layout).compile(ExecutionConfig(strict=True))
+        c.fit((x, ds.y_train), **KW)
+        with pytest.raises(RecompileError, match="re-traced"):
+            c.partial_fit((x, ds.y_train), batch_size=32)
+
+    def test_host_resident_state_raises(self, dataset):
+        """State silently demoted to host arrays (the failure jaxlint JL001
+        exists to prevent) trips the transfer guard at the next dispatch."""
+        ds, x, layout = dataset
+        c = _build(layout).compile(ExecutionConfig(strict=True))
+        c.fit((x, ds.y_train), **KW)
+        c.state = c.state._replace(
+            layers=tuple(
+                jax.tree_util.tree_map(np.asarray, s) for s in c.state.layers
+            )
+        )
+        with pytest.raises(HostTransferError, match="implicit host transfer"):
+            c.partial_fit((x, ds.y_train), batch_size=64)
+
+    def test_non_finite_update_raises(self, dataset):
+        import jax.numpy as jnp
+
+        ds, x, layout = dataset
+        c = _build(layout).compile(ExecutionConfig(strict=True))
+        c.fit((x, ds.y_train), **KW)
+        s0 = c.state.layers[0]
+        c.state = c.state._replace(
+            layers=(s0._replace(w=s0.w.at[0, 0].set(jnp.nan)),)
+            + c.state.layers[1:]
+        )
+        with pytest.raises(NonFiniteError, match="non-finite"):
+            c.partial_fit((x, ds.y_train), batch_size=64)
+
+
+# ----------------------------------------------------------- serving side
+class TestStrictServing:
+    def _lm(self):
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+
+        cfg = get_smoke_config("yi-9b")
+        m = build_model(cfg)
+        return cfg, m, m.init(jax.random.PRNGKey(0))
+
+    def _reqs(self, cfg, lengths, base=0):
+        from repro.runtime import Request
+
+        rng = np.random.default_rng(7)
+        return [
+            Request(
+                rid=base + i,
+                prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                max_new_tokens=5,
+            )
+            for i, n in enumerate(lengths)
+        ]
+
+    def test_decode_rounds_compile_once_and_match(self, dataset):
+        from repro.runtime import ServiceConfig, serve_model
+
+        cfg, m, params = self._lm()
+        strict = serve_model(
+            m, params, ServiceConfig(max_batch=2, max_seq=48, strict=True)
+        )
+        plain = serve_model(
+            m, params, ServiceConfig(max_batch=2, max_seq=48)
+        )
+        out_s = strict.generate(self._reqs(cfg, (4, 11, 7)))
+        out_p = plain.generate(self._reqs(cfg, (4, 11, 7)))
+        for a, b in zip(out_s, out_p):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        # Second round over the same buckets: nothing may re-trace.
+        strict.generate(self._reqs(cfg, (4, 11, 7), base=10))
+        sizes = strict.plan._sentinel.sizes()
+        assert sizes["fused_step"] == 1
+        assert all(v == 1 for n, v in sizes.items() if n.startswith("prefill["))
+
+    def test_batched_plan_strict_predict(self, dataset):
+        from repro.runtime import ServiceConfig
+
+        ds, x, layout = dataset
+        c = _build(layout).compile(ExecutionConfig())
+        c.fit((x, ds.y_train), **KW)
+        svc = c.serve(ServiceConfig(plan="batched", max_batch=64, strict=True))
+        a = svc.predict(x[:64])
+        b = svc.predict(x[:64])
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        sizes = svc.plan._sentinel.sizes()
+        assert sizes, "sentinel watched nothing"

@@ -120,7 +120,7 @@ def test_encdec_decode_matches_forward():
     cache = m.init_cache(b, sd + 2, s)
     ks, vs = [], []
     for li in range(cfg.n_dec_layers):
-        p_l = jax.tree_util.tree_map(lambda a: a[li], params["dec_layers"])
+        p_l = jax.tree_util.tree_map(lambda a, li=li: a[li], params["dec_layers"])
         kx = jnp.einsum("bsd,dhk->bshk", encoded, p_l["xattn"]["wk"])
         vx = jnp.einsum("bsd,dhk->bshk", encoded, p_l["xattn"]["wv"])
         ks.append(kx)

@@ -160,9 +160,9 @@ class TestTrainLoop:
             def loss(p):
                 return jnp.mean((p["w"] - target) ** 2) * batch["scale"]
 
-            l, g = jax.value_and_grad(loss)(p)
+            lv, g = jax.value_and_grad(loss)(p)
             u, s = opt.update(g, s, p)
-            return apply_updates(p, u), s, {"loss": l}
+            return apply_updates(p, u), s, {"loss": lv}
 
         batch_fn = lambda step: {"scale": jnp.asarray(1.0)}
         return params, opt_state, step_fn, batch_fn

@@ -40,7 +40,7 @@ class TestShardCtx:
     def test_L_not_a_pytree(self):
         tree = {"a": L("vocab", "d_fsdp"), "b": {"c": L("mlp")}}
         leaves = jax.tree_util.tree_leaves(tree)
-        assert len(leaves) == 2 and all(isinstance(l, L) for l in leaves)
+        assert len(leaves) == 2 and all(isinstance(lf, L) for lf in leaves)
 
 
 class TestCollectiveParser:
@@ -123,11 +123,11 @@ class TestProbeGrids:
 
         cfg = get_config("yi-9b")
         shape = SHAPES["train_4k"]
-        f = lambda l, s: 7e9 + 3e6 * s + l * (5e8 + 1e6 * s + 40.0 * s * s)
+        f = lambda nl, s: 7e9 + 3e6 * s + nl * (5e8 + 1e6 * s + 40.0 * s * s)
         probes = [
-            {"probe": {"n_layers": l, "seq": s},
-             "flops_per_device": f(l, s), "collectives": {"total": 0}}
-            for l in (1, 2) for s in (1024, 2048, 4096)
+            {"probe": {"n_layers": nl, "seq": s},
+             "flops_per_device": f(nl, s), "collectives": {"total": 0}}
+            for nl in (1, 2) for s in (1024, 2048, 4096)
         ]
         got = extrapolate(probes, cfg, shape, "flops_per_device")
         want = f(cfg.n_layers, shape.seq_len)
