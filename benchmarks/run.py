@@ -8,6 +8,7 @@
   sec4.3 bench_stl10             STL-10-scale run
   issue4 bench_deep              depth sweep: project-once vs fused phases
   issue5 bench_serving_async     async engine vs whole-queue drain (Poisson)
+  issue7 bench_router            Router fabric: multi-tenant p99, crash/restart
   extra  bench_kernels           kernel-level roofline projections
 
 Prints ``name,value,unit,derived`` CSV rows; `python -m benchmarks.run`.
@@ -27,6 +28,7 @@ MODULES = [
     "bench_stl10",
     "bench_deep",
     "bench_serving_async",
+    "bench_router",
     "bench_kernels",
     "bench_scaling",
 ]

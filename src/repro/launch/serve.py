@@ -8,9 +8,13 @@ to an ``InferenceService`` whose DecodePlan advances all decode slots in
 one fused jitted step.  ``--async`` serves through the AsyncEngine
 (futures + continuous batching: requests are admitted into freed slots
 mid-flight); both modes print the latency telemetry (queue-wait /
-prefill / per-token decode percentiles).  ``--smoke`` (default) uses the
-reduced config; ``--full`` loads the real architecture (pod-mesh scale —
-decode caches sequence-sharded per the sharding rules).
+prefill / per-token decode percentiles).  ``--fleet N`` serves through
+the Router fabric instead: N decode engines over shared params, requests
+spread across ``--tenants name:weight,...`` with per-tenant fair-share
+scheduling and an optional ``--deadline-s`` SLO.  ``--smoke`` (default)
+uses the reduced config; ``--full`` loads the real architecture
+(pod-mesh scale — decode caches sequence-sharded per the sharding
+rules).
 """
 from __future__ import annotations
 
@@ -24,10 +28,27 @@ from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models import build_model
 from repro.runtime import (
     Request,
+    RouterConfig,
     ServiceConfig,
+    TenantConfig,
     format_latency_line,
+    serve_fleet,
     serve_model,
 )
+
+
+def parse_tenants(spec):
+    """``"free:1,paid:4"`` -> {name: TenantConfig(weight=...)}."""
+    out = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, weight = part.partition(":")
+        out[name] = TenantConfig(weight=float(weight) if weight else 1.0)
+    if not out:
+        raise ValueError(f"no tenants in spec {spec!r}")
+    return out
 
 
 def main():
@@ -53,6 +74,26 @@ def main():
         "--max-queue", type=int, default=None,
         help="bounded inbox/queue depth (backpressure)",
     )
+    ap.add_argument(
+        "--fleet", type=int, default=1,
+        help="serve through the Router fabric with N decode engines over "
+             "shared params (implies futures API)",
+    )
+    ap.add_argument(
+        "--tenants", default="default:1",
+        help="tenant spec name:weight,... — requests round-robin across "
+             "tenants; weights set the DRR fair share",
+    )
+    ap.add_argument(
+        "--deadline-s", type=float, default=None,
+        help="per-request SLO budget; expired requests shed with "
+             "DeadlineExceeded before dispatch (fleet mode)",
+    )
+    ap.add_argument(
+        "--routing", choices=("p95", "round_robin"), default="p95",
+        help="fleet engine selection: telemetry-driven p95 queue-wait "
+             "(default) or naive round-robin",
+    )
     size = ap.add_mutually_exclusive_group()
     size.add_argument(
         "--smoke", dest="smoke", action="store_true",
@@ -75,6 +116,9 @@ def main():
         raise SystemExit("decoder-only serving CLI; use examples for enc-dec")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    if args.fleet > 1:
+        serve_via_router(model, params, cfg, args)
+        return
     service = serve_model(
         model, params,
         ServiceConfig(
@@ -121,6 +165,68 @@ def main():
             "e2e_s",
         )
     )
+
+
+def serve_via_router(model, params, cfg, args):
+    """The ``--fleet N`` path: N decode engines behind one Router."""
+    from repro.runtime import DeadlineExceeded
+
+    tenants = parse_tenants(args.tenants)
+    router = serve_fleet(
+        model, params,
+        ServiceConfig(
+            max_batch=args.max_batch,
+            max_seq=args.max_seq,
+            buckets=tuple(args.buckets) if args.buckets else None,
+            max_queue=args.max_queue,
+            strict=args.strict,
+            router=RouterConfig(tenants=tenants, routing=args.routing),
+        ),
+        fleet=args.fleet,
+    )
+    rng = np.random.default_rng(0)
+    names = list(tenants)
+    t0 = time.perf_counter()
+    futures = [
+        router.submit(
+            Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                max_new_tokens=args.max_new,
+            ),
+            tenant=names[i % len(names)],
+            deadline_s=args.deadline_s,
+        )
+        for i in range(args.requests)
+    ]
+    done, shed = [], 0
+    for f in futures:
+        try:
+            done.append(f.result())
+        except DeadlineExceeded:
+            shed += 1
+    router.drain_and_stop()
+    dt = time.perf_counter() - t0
+    tot = sum(len(c.tokens) for c in done)
+    snap = router.metrics.snapshot()
+    print(
+        f"[serve/fleet] {args.arch}: {args.fleet} engines ({args.routing}), "
+        f"{len(done)} reqs done, {shed} shed, {tot} tokens, {tot/dt:.1f} "
+        f"tok/s, {snap['restarts']} restarts"
+    )
+    for name in names:
+        tm = snap["tenants"].get(name)
+        if tm is None:
+            continue
+        print(
+            f"[tenant {name}] submitted={tm['submitted']} "
+            f"completed={tm['completed']} shed_deadline={tm['shed_deadline']} "
+            f"shed_queue_full={tm['shed_queue_full']} | "
+            + format_latency_line(tm, "sched_wait_s", "e2e_s")
+        )
+    for name, eng in snap["engines"].items():
+        print(f"[engine {name}] " + format_latency_line(
+            eng, "queue_wait_s", "e2e_s"))
 
 
 if __name__ == "__main__":

@@ -4,7 +4,8 @@
 # (checkpoint/restart, stragglers, elastic restore), and the serving
 # subsystem (ServiceConfig -> InferenceService -> ServePlan: batched /
 # fused slot-batched decode / streaming), with the async engine
-# (continuous batching + futures) and latency telemetry on top.
+# (continuous batching + futures), latency telemetry, and the Router
+# serving fabric (per-tenant SLO scheduling over N engines) on top.
 from repro.runtime.activations import ActivationStore, store_for
 from repro.runtime.engine import AsyncEngine, EngineStopped, QueueFull
 from repro.runtime.epoch_engine import (
@@ -22,10 +23,22 @@ from repro.runtime.metrics import (
     Counter,
     Gauge,
     Histogram,
+    RouterMetrics,
     ServiceMetrics,
+    TenantMetrics,
     format_latency_line,
 )
 from repro.runtime.plans import BatchPlan, ExecutionPlan, ScanPlan, make_plan
+from repro.runtime.router import (
+    DeadlineExceeded,
+    NoEngineAvailable,
+    Router,
+    RouterConfig,
+    RouterError,
+    RouterStopped,
+    TenantConfig,
+    TenantQueueFull,
+)
 from repro.runtime.program import (
     BcpnnReadoutPhase,
     HiddenPhase,
@@ -46,6 +59,7 @@ from repro.runtime.service import (
     ServiceConfig,
     StreamingPlan,
     pad_cache_like,
+    serve_fleet,
     serve_model,
 )
 from repro.runtime.serve_loop import ServeSession
@@ -54,7 +68,10 @@ from repro.runtime.train_loop import TrainLoopConfig, TrainLoopResult, train_loo
 __all__ = [
     "ActivationStore", "store_for",
     "AsyncEngine", "EngineStopped", "QueueFull",
-    "Counter", "Gauge", "Histogram", "ServiceMetrics", "format_latency_line",
+    "Counter", "Gauge", "Histogram", "ServiceMetrics", "TenantMetrics",
+    "RouterMetrics", "format_latency_line",
+    "Router", "RouterConfig", "RouterError", "RouterStopped", "TenantConfig",
+    "TenantQueueFull", "DeadlineExceeded", "NoEngineAvailable",
     "epoch_sharding", "gather_batch", "hidden_epoch_cached_fn",
     "hidden_epoch_fn", "readout_epoch_cached_fn", "readout_epoch_fn",
     "sgd_epoch_cached_fn", "sgd_epoch_fn", "stack_epoch",
@@ -64,6 +81,6 @@ __all__ = [
     "TrainLoopConfig", "TrainLoopResult", "train_loop",
     "SERVE_PLANS", "BatchedPlan", "Completion", "DecodePlan", "DecodeSession",
     "InferenceService", "Request", "ServePlan", "ServiceConfig",
-    "StreamingPlan", "pad_cache_like", "serve_model",
+    "StreamingPlan", "pad_cache_like", "serve_model", "serve_fleet",
     "ServeSession",
 ]

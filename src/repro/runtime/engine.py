@@ -28,6 +28,12 @@ every :class:`~repro.runtime.service.ServePlan` a real serving runtime:
   (:class:`EngineStopped`), completes everything in flight and queued,
   then joins the thread — no Future is ever dropped (a loop crash fails
   the remaining futures rather than abandoning them).
+* **Restart seam:** ``drain_and_stop()`` returns the work items the loop
+  could NOT complete (empty on a graceful drain; the still-queued inbox
+  plus any in-flight items when the loop crashed).  A supervisor — the
+  :mod:`repro.runtime.router` Router is the in-repo one — re-enqueues the
+  returned items onto a replacement engine built from the same plan
+  factory (hot restart) instead of reaching into private engine state.
 
 Latency telemetry (queue-wait, prefill, per-token decode, end-to-end)
 records into the plan's shared :class:`~repro.runtime.metrics.ServiceMetrics`
@@ -73,15 +79,19 @@ class AsyncEngine:
 
     _POLL_S = 0.05  # idle wakeup so state changes are never missed
 
-    def __init__(self, plan, config, metrics=None):
+    def __init__(self, plan, config, metrics=None, name: str = "engine"):
         self.plan = plan
         self.config = config
+        self.name = name  # thread / diagnostics label (router slot name)
         self.metrics = metrics if metrics is not None else plan.metrics
         self._inbox: Deque[_Work] = deque()
         self._cv = threading.Condition()
         self._state = "new"
         self._thread: Optional[threading.Thread] = None
         self._next_tag = 0
+        # Work the loop could not complete (crash path): handed back to
+        # supervisors via drain_and_stop()'s return value.
+        self._leftover: List[Any] = []
         # Engine-level counters (plan/latency stats live in self.metrics).
         self.admitted = 0  # decode requests placed into slots
         self.batches = 0  # batched micro-batches dispatched
@@ -104,6 +114,7 @@ class AsyncEngine:
     @property
     def stats(self) -> Dict[str, Any]:
         return {
+            "name": self.name,
             "state": self.state,
             "inbox": self.inbox_depth,
             "admitted": self.admitted,
@@ -120,7 +131,7 @@ class AsyncEngine:
                 raise RuntimeError(f"cannot start a {self._state} engine")
             self._state = "running"
             self._thread = threading.Thread(
-                target=self._run, name="repro-serve-engine", daemon=True
+                target=self._run, name=f"repro-serve-{self.name}", daemon=True
             )
             self._thread.start()
         return self
@@ -154,20 +165,32 @@ class AsyncEngine:
             self._cv.notify_all()
         return fut
 
-    def drain_and_stop(self, timeout: Optional[float] = None) -> None:
+    def drain_and_stop(self, timeout: Optional[float] = None) -> List[Any]:
         """Reject new submits, finish queued + in-flight work, stop.
+
+        Returns the work items the loop could NOT complete — the restart
+        contract: empty after a graceful drain (every queued and in-flight
+        item was served before the thread exited), non-empty when the loop
+        crashed (the still-queued inbox plus any in-flight items; their
+        futures were failed with :class:`EngineStopped` carrying the causal
+        exception).  A supervisor (the Router's hot-restart path) re-enqueues
+        the returned items onto a replacement engine instead of re-reading
+        private engine state.  Idempotent: repeated calls return the same
+        list.
+
         Raises ``TimeoutError`` (leaving the engine ``draining``) if the
         loop is still working when ``timeout`` expires — the engine is NOT
         marked stopped while its thread may still drive the plan."""
         with self._cv:
             if self._state == "stopped":
-                return
+                return list(self._leftover)
             if self._state == "new":
                 # Work queued before start(): run it to completion rather
                 # than dropping futures on the floor.
                 self._state = "running"
                 self._thread = threading.Thread(
-                    target=self._run, name="repro-serve-engine", daemon=True
+                    target=self._run, name=f"repro-serve-{self.name}",
+                    daemon=True,
                 )
                 self._thread.start()
             self._state = "draining"
@@ -182,6 +205,7 @@ class AsyncEngine:
         with self._cv:
             self._state = "stopped"
             self.metrics.queue_depth.set(0)
+            return list(self._leftover)
 
     # ------------------------------------------------------------ main loop
     @staticmethod
@@ -209,11 +233,14 @@ class AsyncEngine:
         finally:
             # A crashed loop must not strand futures or keep accepting
             # work: mark the engine stopped (submit() then raises
-            # EngineStopped) and fail whatever is left queued.
+            # EngineStopped), fail whatever is left queued, and record the
+            # undone items so drain_and_stop() can hand them to a
+            # supervisor for re-enqueue (hot restart).
             with self._cv:
                 self._state = "stopped"
                 leftover = list(self._inbox)
                 self._inbox.clear()
+                self._leftover.extend(w.item for w in leftover)
             for w in leftover:
                 self._fail(
                     w,
@@ -300,6 +327,9 @@ class AsyncEngine:
         except BaseException as e:
             # A crashed step must not strand admitted requests' futures —
             # and their waiters deserve the real cause, not a generic stop.
+            # The in-flight items count as undone work for the restart seam.
+            with self._cv:
+                self._leftover.extend(w.item for w in inflight.values())
             for w in inflight.values():
                 self._fail(
                     w,
@@ -351,6 +381,19 @@ class AsyncEngine:
             except Exception as e:  # noqa: BLE001 — fail the whole batch
                 for w in batch:
                     w.future.set_exception(e)
+            except BaseException as e:
+                # Loop-killing crash mid-batch: the claimed futures must not
+                # hang, and the items count as undone for the restart seam.
+                with self._cv:
+                    self._leftover.extend(w.item for w in batch)
+                for w in batch:
+                    self._fail(
+                        w,
+                        self._crash_exc(
+                            "engine loop crashed with a batch in flight", e
+                        ),
+                    )
+                raise
 
     # -------------------------------------------------- streaming (latency)
     def _loop_streaming(self) -> None:
@@ -372,3 +415,15 @@ class AsyncEngine:
                 self._complete(w, self.plan.infer(np.asarray(w.item)))
             except Exception as e:  # noqa: BLE001 — per-item failure
                 w.future.set_exception(e)
+            except BaseException as e:
+                # Loop-killing crash mid-item: fail the claimed future and
+                # hand the item back through the restart seam.
+                with self._cv:
+                    self._leftover.append(w.item)
+                self._fail(
+                    w,
+                    self._crash_exc(
+                        "engine loop crashed with an item in flight", e
+                    ),
+                )
+                raise

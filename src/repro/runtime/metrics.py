@@ -1,11 +1,13 @@
 """Serving telemetry: monotonic counters, gauges, percentile histograms.
 
-The serving subsystem (sync ``InferenceService`` drains and the
-:mod:`repro.runtime.engine` async loops) records where every request's
-wall-time goes — queue wait, prefill, per-token decode, micro-batch
-execution — into one :class:`ServiceMetrics` bundle shared by the plan,
-the service front door, and the engine.  ``service.stats["telemetry"]``
-(and the ``launch/serve.py`` CLI) surface the snapshot.
+The serving subsystem (sync ``InferenceService`` drains, the
+:mod:`repro.runtime.engine` async loops, and the :mod:`repro.runtime.router`
+fleet scheduler) records where every request's wall-time goes — queue wait,
+prefill, per-token decode, micro-batch execution — into one
+:class:`ServiceMetrics` bundle shared by the plan, the service front door,
+and the engine.  ``service.stats["telemetry"]`` (and the
+``launch/serve.py`` CLI) surface the snapshot; the Router reads per-engine
+``queue_wait_s`` percentiles to pick the least-loaded engine.
 
 Design constraints, in order:
 
@@ -13,8 +15,13 @@ Design constraints, in order:
   ring plus two scalar updates under a lock — no sorting, no allocation
   growth.  Percentiles are computed only when a snapshot is asked for.
 * **Thread-safe.**  Async submitters hammer ``Counter.inc`` and the engine
-  thread records latencies concurrently; every instrument takes its own
-  lock (no global registry lock).
+  thread records latencies concurrently; every instrument takes a lock.
+* **Consistent snapshots.**  All instruments of one bundle share the
+  bundle's re-entrant lock, so :meth:`ServiceMetrics.snapshot` reads every
+  counter and histogram inside ONE critical section — a scheduler (the
+  Router) comparing ``submitted`` against ``completed``, or percentiles
+  across engines, never sees a torn read where events landed between
+  field reads.  Standalone instruments default to a private lock.
 * **Bounded memory.**  Histograms keep the last ``window`` observations
   (default 2048); ``count``/``sum`` stay exact over the full lifetime, so
   throughput math never loses events while percentile estimates track
@@ -27,16 +34,25 @@ exactly (asserted in tests).
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 import numpy as np
 
 
 class Counter:
-    """A monotonic event counter."""
+    """A monotonic event counter.
 
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
+    ``lock`` lets a bundle (:class:`ServiceMetrics`, :class:`RouterMetrics`)
+    share ONE re-entrant lock across its instruments so bundle snapshots are
+    point-in-time consistent; standalone counters default to a private lock.
+    """
+
+    # The lock arrives via the constructor, so jaxlint cannot see the
+    # factory call — register the attribute for JL004 explicitly.
+    _JAXLINT_LOCKS = ("_lock",)
+
+    def __init__(self, lock: Optional[Any] = None) -> None:
+        self._lock = lock if lock is not None else threading.Lock()
         self._value = 0
 
     def inc(self, n: int = 1) -> None:
@@ -54,8 +70,10 @@ class Counter:
 class Gauge:
     """A point-in-time value (queue depth, active slots)."""
 
-    def __init__(self) -> None:
-        self._lock = threading.Lock()
+    _JAXLINT_LOCKS = ("_lock",)
+
+    def __init__(self, lock: Optional[Any] = None) -> None:
+        self._lock = lock if lock is not None else threading.Lock()
         self._value = 0.0
 
     def set(self, v: float) -> None:
@@ -79,10 +97,12 @@ class Histogram:
     ``count``/``sum``/``max`` are exact over every observation ever made.
     """
 
-    def __init__(self, window: int = 2048) -> None:
+    _JAXLINT_LOCKS = ("_lock",)
+
+    def __init__(self, window: int = 2048, lock: Optional[Any] = None) -> None:
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
-        self._lock = threading.Lock()
+        self._lock = lock if lock is not None else threading.Lock()
         self._ring = np.empty(window, np.float64)
         self._window = window
         self._n = 0  # lifetime observation count
@@ -153,6 +173,11 @@ class ServiceMetrics:
                          request (inter-token latency).
       ``batch_s``:       one padded micro-batch forward (batched plans).
       ``e2e_s``:         submit -> completion, the caller-visible latency.
+
+    Every instrument shares the bundle's ONE re-entrant lock, so
+    :meth:`snapshot` is a single lock acquisition and the returned dict is a
+    consistent point-in-time view — the Router's scheduling reads (per-engine
+    ``queue_wait_s`` p95 vs ``completed`` counts) rely on this.
     """
 
     HISTOGRAMS: Sequence[str] = (
@@ -160,25 +185,134 @@ class ServiceMetrics:
     )
 
     def __init__(self, window: int = 2048) -> None:
-        self.submitted = Counter()
-        self.completed = Counter()
-        self.rejected = Counter()
-        self.queue_depth = Gauge()
+        self._lock = threading.RLock()
+        self.submitted = Counter(lock=self._lock)
+        self.completed = Counter(lock=self._lock)
+        self.rejected = Counter(lock=self._lock)
+        self.queue_depth = Gauge(lock=self._lock)
         for name in self.HISTOGRAMS:
-            setattr(self, name, Histogram(window))
+            setattr(self, name, Histogram(window, lock=self._lock))
 
     def hist(self, name: str) -> Histogram:
         return getattr(self, name)
 
     def snapshot(self) -> Dict[str, Any]:
-        out: Dict[str, Any] = {
-            "submitted": self.submitted.value,
-            "completed": self.completed.value,
-            "rejected": self.rejected.value,
-            "queue_depth": self.queue_depth.value,
-        }
+        """A consistent point-in-time view: counters AND histogram
+        percentiles read under one acquisition of the bundle lock (the
+        instruments' nested acquisitions are re-entrant), so no event can
+        land between the ``submitted`` read and the ``completed`` read."""
+        with self._lock:
+            out: Dict[str, Any] = {
+                "submitted": self.submitted.value,
+                "completed": self.completed.value,
+                "rejected": self.rejected.value,
+                "queue_depth": self.queue_depth.value,
+            }
+            for name in self.HISTOGRAMS:
+                out[name] = self.hist(name).snapshot()
+        return out
+
+
+class TenantMetrics:
+    """Per-tenant request-lifecycle counters for the Router.
+
+    ``submitted``/``completed`` bracket the happy path; the shed counters
+    split rejections by cause (the Router never FIFO-blind-drops):
+    ``shed_queue_full`` (bounced off the tenant's bounded queue),
+    ``shed_deadline`` (expired before dispatch), ``requeued`` (bounced off a
+    crashed engine and put back), ``failed`` (dispatch errors surfaced on the
+    future).  ``sched_wait_s`` is router-queue wait: submit -> hand-off into
+    an engine inbox; ``e2e_s`` is submit -> result on the caller's future
+    (the per-tenant SLO view, spanning redispatches across restarts).
+    """
+
+    COUNTERS: Sequence[str] = (
+        "submitted", "completed", "shed_queue_full", "shed_deadline",
+        "requeued", "failed",
+    )
+    HISTOGRAMS: Sequence[str] = ("sched_wait_s", "e2e_s")
+
+    def __init__(self, lock: Any, window: int = 1024) -> None:
+        for name in self.COUNTERS:
+            setattr(self, name, Counter(lock=lock))
+        self.queue_depth = Gauge(lock=lock)
         for name in self.HISTOGRAMS:
-            out[name] = self.hist(name).snapshot()
+            setattr(self, name, Histogram(window, lock=lock))
+
+    def snapshot(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            name: getattr(self, name).value for name in self.COUNTERS
+        }
+        out["queue_depth"] = self.queue_depth.value
+        for name in self.HISTOGRAMS:
+            out[name] = getattr(self, name).snapshot()
+        return out
+
+
+class RouterMetrics:
+    """The Router's roll-up: per-tenant counters, per-engine bundles,
+    fleet-level lifecycle counters.
+
+    Tenant bundles share THIS object's re-entrant lock (one acquisition
+    snapshots every tenant consistently); each engine keeps its own
+    :class:`ServiceMetrics` bundle — registered here so the roll-up
+    :meth:`snapshot` carries the whole fabric.
+    """
+
+    def __init__(self, window: int = 1024) -> None:
+        self._lock = threading.RLock()
+        self._window = window
+        self._tenants: Dict[str, TenantMetrics] = {}
+        self._engines: Dict[str, ServiceMetrics] = {}
+        self.dispatched = Counter(lock=self._lock)
+        self.restarts = Counter(lock=self._lock)
+
+    def tenant(self, name: str) -> TenantMetrics:
+        """The (auto-created) bundle for one tenant."""
+        with self._lock:
+            tm = self._tenants.get(name)
+            if tm is None:
+                tm = TenantMetrics(self._lock, self._window)
+                self._tenants[name] = tm
+            return tm
+
+    def register_engine(self, name: str,
+                        metrics: Optional[ServiceMetrics] = None
+                        ) -> ServiceMetrics:
+        """Register (or create) the per-engine bundle under ``name``.
+        Re-registering a name keeps the existing bundle unless a new one is
+        passed — a hot-restarted engine inherits its predecessor's
+        histograms, so scheduling signal survives the restart."""
+        with self._lock:
+            if metrics is not None:
+                self._engines[name] = metrics
+            elif name not in self._engines:
+                self._engines[name] = ServiceMetrics()
+            return self._engines[name]
+
+    @property
+    def tenants(self) -> Dict[str, TenantMetrics]:
+        with self._lock:
+            return dict(self._tenants)
+
+    @property
+    def engines(self) -> Dict[str, ServiceMetrics]:
+        with self._lock:
+            return dict(self._engines)
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            out: Dict[str, Any] = {
+                "dispatched": self.dispatched.value,
+                "restarts": self.restarts.value,
+                "tenants": {
+                    name: tm.snapshot() for name, tm in self._tenants.items()
+                },
+            }
+            engines = dict(self._engines)
+        # Engine bundles own separate locks: snapshot each consistently
+        # OUTSIDE the router-metrics lock (no nested foreign acquisition).
+        out["engines"] = {name: sm.snapshot() for name, sm in engines.items()}
         return out
 
 
@@ -203,5 +337,7 @@ __all__ = [
     "Gauge",
     "Histogram",
     "ServiceMetrics",
+    "TenantMetrics",
+    "RouterMetrics",
     "format_latency_line",
 ]

@@ -167,6 +167,10 @@ class ServiceConfig:
                 asserts the plan's jitted callables compile exactly once
                 across repeated submit/predict/generate rounds (new prefill
                 buckets get their own baseline).
+    router:     a ``repro.runtime.router.RouterConfig`` enabling the fleet
+                front door — ``serve_fleet()`` builds N engines over shared
+                params behind one Router (per-tenant queues, deadlines, hot
+                restart).  None = single-engine serving, unchanged.
     """
 
     max_batch: int = 4
@@ -180,6 +184,7 @@ class ServiceConfig:
     layer: int = 0
     async_mode: bool = False
     strict: bool = False
+    router: Optional[Any] = None
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -210,6 +215,16 @@ class ServiceConfig:
                     f"{self.buckets!r}"
                 )
             object.__setattr__(self, "buckets", b)
+        if self.router is not None:
+            # Lazy import: router -> service for Request/ServiceConfig, so
+            # the validation (not the module top) pulls the router in.
+            from repro.runtime.router import RouterConfig
+
+            if not isinstance(self.router, RouterConfig):
+                raise ValueError(
+                    f"router must be a RouterConfig, got "
+                    f"{type(self.router).__name__}"
+                )
 
     def bucket_for(self, n: int) -> int:
         """Smallest configured bucket >= n, or n itself when none fits."""
@@ -941,6 +956,53 @@ def serve_model(model, params, config: Optional[ServiceConfig] = None) -> Infere
     return service
 
 
+def serve_fleet(model, params, config: Optional[ServiceConfig] = None,
+                *, fleet: int = 2):
+    """Bind an LM to a started :class:`~repro.runtime.router.Router`
+    fronting ``fleet`` decode engines over SHARED params — the multi-engine
+    twin of ``serve_model``.  One set of weights, N independent decode
+    loops; ``router.submit(request, tenant=..., deadline_s=...)`` returns
+    a Future exactly like the single-engine async path.
+
+    ``config.router`` (a RouterConfig) carries the scheduling knobs
+    (tenants, routing policy, restart budgets); the rest of the
+    ServiceConfig applies per engine.  Engine inboxes are kept shallow
+    (``max_queue`` defaults to ``max_batch`` here) so queueing — and
+    therefore tenant/deadline policy — lives in the Router.
+    """
+    from repro.runtime.router import Router, RouterConfig
+
+    config = config if config is not None else ServiceConfig()
+    if fleet < 1:
+        raise ValueError(f"fleet must be >= 1, got {fleet}")
+    plan_name = config.plan or "decode"
+    if plan_name != "decode":
+        raise ValueError(
+            f"serve_fleet() serves token decoding; plan {plan_name!r} needs "
+            "a CompiledNetwork front door"
+        )
+    router_config = config.router
+    if router_config is None:
+        router_config = RouterConfig()
+    if config.max_queue is None:
+        engine_config = dataclasses.replace(
+            config, max_queue=config.max_batch, router=None
+        )
+    else:
+        engine_config = dataclasses.replace(config, router=None)
+
+    def factory(cfg, metrics):
+        # Closes over (model, params) only — called again on hot restart,
+        # and the rebuilt plan shares the same params (no re-upload).
+        return DecodePlan(model, params, cfg, metrics=metrics)
+
+    router = Router(router_config)
+    for i in range(fleet):
+        router.add_engine(f"decode{i}", factory, engine_config)
+    router.start()
+    return router
+
+
 __all__ = [
     "POLICIES",
     "Request",
@@ -955,4 +1017,5 @@ __all__ = [
     "SERVE_PLANS",
     "InferenceService",
     "serve_model",
+    "serve_fleet",
 ]

@@ -1,0 +1,452 @@
+"""Serving fabric: the Router over N AsyncEngines — multi-tenant DRR
+fairness, EDF + deadline shedding, typed admission control, telemetry-driven
+engine selection, and crash + hot-restart with no dropped futures."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    AsyncEngine,
+    DeadlineExceeded,
+    EngineStopped,
+    NoEngineAvailable,
+    Request,
+    Router,
+    RouterConfig,
+    RouterStopped,
+    ServiceConfig,
+    ServiceMetrics,
+    TenantConfig,
+    TenantQueueFull,
+    serve_fleet,
+    serve_model,
+)
+from repro.runtime.service import ServePlan
+
+RNG = np.random.default_rng(7)
+
+
+class SleepyPlan(ServePlan):
+    """Streaming plan with a pure-sleep infer: deterministic fabric tests
+    with zero compute noise.  Records served items per engine tag."""
+
+    name = "streaming"
+
+    def __init__(self, config, metrics=None, delay_s=0.002, tag="e",
+                 served=None):
+        super().__init__(config, metrics=metrics)
+        self.delay_s = delay_s
+        self.tag = tag
+        self.served = served if served is not None else []
+
+    def infer(self, x):
+        time.sleep(self.delay_s)
+        self.served.append(int(x))
+        return (self.tag, int(x))
+
+
+class _Boom(BaseException):
+    """Escapes the per-item Exception handler: kills the engine loop."""
+
+
+def sleepy_factory(delay_s=0.002, tag="e", served=None):
+    def factory(config, metrics):
+        return SleepyPlan(config, metrics=metrics, delay_s=delay_s, tag=tag,
+                          served=served)
+
+    return factory
+
+
+def crashy_factory(crash_on, armed, delay_s=0.001, served=None):
+    """Crashes the engine loop (BaseException) the first time an item in
+    ``crash_on`` is served while ``armed`` holds the key "on"."""
+
+    def factory(config, metrics):
+        plan = SleepyPlan(config, metrics=metrics, delay_s=delay_s,
+                          served=served)
+        orig = plan.infer
+
+        def infer(x):
+            if int(x) in crash_on and armed.pop("on", None):
+                raise _Boom(f"injected crash at {int(x)}")
+            return orig(x)
+
+        plan.infer = infer
+        return plan
+
+    return factory
+
+
+def fleet(*factories, config=None, max_queue=1, **router_kw):
+    router = Router(RouterConfig(**router_kw))
+    for i, f in enumerate(factories):
+        router.add_engine(
+            f"e{i}", f, config or ServiceConfig(max_queue=max_queue)
+        )
+    return router
+
+
+# ------------------------------------------------------------------ basics
+class TestFabricBasics:
+    def test_fleet_completes_everything_across_engines(self):
+        r = fleet(sleepy_factory(tag="e0"), sleepy_factory(tag="e1"),
+                  max_queue=2).start()
+        futs = [r.submit(i) for i in range(30)]
+        res = [f.result(timeout=10) for f in futs]
+        assert sorted(x for _, x in res) == list(range(30))
+        assert {t for t, _ in res} == {"e0", "e1"}  # both engines served
+        r.drain_and_stop(timeout=10)
+        assert r.state == "stopped"
+        snap = r.metrics.snapshot()
+        assert snap["dispatched"] == 30
+        assert snap["tenants"]["default"]["completed"] == 30
+
+    def test_submit_before_start_queues_deterministically(self):
+        r = fleet(sleepy_factory())
+        futs = [r.submit(i) for i in range(5)]
+        assert all(not f.done() for f in futs)
+        r.start()
+        assert [f.result(timeout=5)[1] for f in futs] == list(range(5))
+        r.drain_and_stop(timeout=5)
+
+    def test_submit_after_drain_raises_typed(self):
+        r = fleet(sleepy_factory()).start()
+        r.drain_and_stop(timeout=5)
+        with pytest.raises(RouterStopped):
+            r.submit(1)
+
+    def test_no_engine_for_pool_is_typed(self):
+        r = fleet(sleepy_factory())
+        with pytest.raises(NoEngineAvailable):
+            r.submit(np.zeros(4), pool="batched")
+
+    def test_stats_shape(self):
+        r = fleet(sleepy_factory(), max_queue=2).start()
+        [f.result(timeout=5) for f in [r.submit(i) for i in range(4)]]
+        st = r.stats
+        assert st["state"] == "running"
+        assert st["engines"]["e0"]["pool"] == "streaming"
+        assert st["engines"]["e0"]["restarts"] == 0
+        assert "telemetry" in st and "engines" in st["telemetry"]
+        r.drain_and_stop(timeout=5)
+
+
+# ------------------------------------------------------- fairness/deadlines
+class TestScheduling:
+    def test_low_weight_tenant_progresses_under_flood(self):
+        """The DRR satellite: a weight-1 tenant flooded out by a weight-4
+        tenant still progresses — its items complete interleaved, not
+        after the heavy tenant's entire backlog."""
+        served = []
+        r = fleet(
+            sleepy_factory(served=served),
+            tenants={"heavy": TenantConfig(weight=4),
+                     "light": TenantConfig(weight=1)},
+        )
+        # Everything queued before the scheduler runs: completion order is
+        # exactly DRR dispatch order (one engine, inbox depth 1).
+        heavy = [r.submit(i, tenant="heavy") for i in range(20)]
+        light = [r.submit(100 + i, tenant="light") for i in range(4)]
+        r.start()
+        for f in heavy + light:
+            f.result(timeout=10)
+        r.drain_and_stop(timeout=10)
+        # 4:1 weights => light's first item lands within the first DRR
+        # round (5 dispatches), its last by ~4 rounds — far before the
+        # heavy backlog drains.
+        light_pos = sorted(served.index(100 + i) for i in range(4))
+        assert light_pos[0] <= 5, f"light starved: order {served}"
+        assert light_pos[-1] <= 20, f"light starved: order {served}"
+        # Weighted share: in the window where both tenants were
+        # backlogged (up to light's last item), heavy got ~4x light.
+        window = served[: light_pos[-1] + 1]
+        heavy_in_window = sum(1 for x in window if x < 100)
+        assert 2.5 <= heavy_in_window / 4 <= 5.5
+
+    def test_priority_orders_within_tenant(self):
+        served = []
+        r = fleet(sleepy_factory(served=served))
+        r.submit(0, priority=0.0)
+        r.submit(1, priority=5.0)
+        r.submit(2, priority=1.0)
+        r.start()
+        r.drain_and_stop(timeout=10)
+        assert served == [1, 2, 0]
+
+    def test_edf_within_priority(self):
+        served = []
+        r = fleet(sleepy_factory(served=served))
+        r.submit(0)                    # no deadline: sorts last
+        r.submit(1, deadline_s=30.0)
+        r.submit(2, deadline_s=10.0)   # earliest deadline first
+        r.start()
+        r.drain_and_stop(timeout=10)
+        assert served == [2, 1, 0]
+
+    def test_expired_deadline_shed_before_dispatch(self):
+        """The deadline satellite: an expired request never reaches an
+        engine and its future carries the causal DeadlineExceeded."""
+        served = []
+        # One slow engine, inbox 1: two high-priority submits occupy the
+        # engine (~80ms); the deadlined one (EDF would otherwise jump it
+        # ahead, so priority pins it behind) expires in the router queue.
+        r = fleet(sleepy_factory(delay_s=0.04, served=served))
+        blockers = [r.submit(i, priority=1.0) for i in (0, 1)]
+        doomed = r.submit(2, deadline_s=0.01)
+        r.start()
+        with pytest.raises(DeadlineExceeded) as ei:
+            doomed.result(timeout=10)
+        assert ei.value.tenant == "default"
+        assert ei.value.deadline_s == pytest.approx(0.01)
+        assert ei.value.waited_s >= 0.01
+        [f.result(timeout=10) for f in blockers]
+        r.drain_and_stop(timeout=10)
+        assert 2 not in served  # shed BEFORE dispatch, engine never paid
+        assert r.metrics.snapshot()["tenants"]["default"]["shed_deadline"] == 1
+
+    def test_dead_on_arrival_deadline_shed_on_future(self):
+        r = fleet(sleepy_factory()).start()
+        fut = r.submit(7, deadline_s=-1.0)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=5)
+        r.drain_and_stop(timeout=5)
+
+    def test_tenant_queue_full_is_per_tenant(self):
+        """Admission control sheds the flooding tenant only — the other
+        tenant keeps admitting (never FIFO-blind drops)."""
+        r = fleet(
+            sleepy_factory(delay_s=0.02),
+            tenants={"flood": TenantConfig(max_queue=3),
+                     "calm": TenantConfig(max_queue=3)},
+        )
+        floods = [r.submit(i, tenant="flood") for i in range(3)]
+        with pytest.raises(TenantQueueFull) as ei:
+            r.submit(99, tenant="flood")
+        assert ei.value.tenant == "flood" and ei.value.bound == 3
+        calm = r.submit(0, tenant="calm")  # unaffected
+        r.start()
+        assert calm.result(timeout=10)[1] == 0
+        [f.result(timeout=10) for f in floods]
+        r.drain_and_stop(timeout=10)
+        snap = r.metrics.snapshot()
+        assert snap["tenants"]["flood"]["shed_queue_full"] == 1
+        assert snap["tenants"]["calm"]["shed_queue_full"] == 0
+
+
+# ------------------------------------------------------------- engine choice
+class TestRouting:
+    def test_p95_routing_avoids_degraded_engine(self):
+        """Telemetry-driven selection: with one engine 10x slower, p95
+        routing sends it a (much) smaller share than round-robin."""
+
+        def share_of_slow(routing):
+            slow_served = []
+            r = fleet(
+                sleepy_factory(delay_s=0.002),
+                sleepy_factory(delay_s=0.02, served=slow_served),
+                max_queue=2,
+                routing=routing,
+            ).start()
+            futs = [r.submit(i) for i in range(120)]
+            for f in futs:
+                f.result(timeout=30)
+            r.drain_and_stop(timeout=30)
+            return len(slow_served)
+
+        rr = share_of_slow("round_robin")
+        p95 = share_of_slow("p95")
+        assert p95 < rr, f"p95 routing sent {p95} to the slow engine vs {rr}"
+
+    def test_round_robin_spreads_evenly(self):
+        e0, e1 = [], []
+        r = fleet(
+            sleepy_factory(served=e0),
+            sleepy_factory(served=e1),
+            max_queue=2,
+            routing="round_robin",
+        ).start()
+        [f.result(timeout=10) for f in [r.submit(i) for i in range(20)]]
+        r.drain_and_stop(timeout=10)
+        assert abs(len(e0) - len(e1)) <= 6
+
+
+# ------------------------------------------------------------ crash/restart
+# Crash injection raises a BaseException out of the engine loop thread on
+# purpose (that is the failure mode under test); pytest's threadexception
+# plugin would otherwise warn about each injected crash.
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning"
+)
+class TestHotRestart:
+    def test_crash_requeues_and_restarts_no_stranded_futures(self):
+        """The acceptance invariant: an injected engine crash mid-run
+        strands nothing — undone work re-enqueues, a replacement engine
+        spins up from the same factory, every future resolves."""
+        armed = {"on": True}
+        r = fleet(
+            crashy_factory({5}, armed),
+            max_queue=2,
+            tenants={"a": TenantConfig(), "b": TenantConfig()},
+        ).start()
+        futs = [r.submit(i, tenant="ab"[i % 2]) for i in range(12)]
+        res = [f.result(timeout=30) for f in futs]
+        assert sorted(x for _, x in res) == list(range(12))
+        st = r.stats
+        assert st["engines"]["e0"]["restarts"] == 1
+        snap = r.metrics.snapshot()
+        assert snap["restarts"] == 1
+        assert sum(tm["requeued"] for tm in snap["tenants"].values()) >= 1
+        r.drain_and_stop(timeout=30)
+
+    def test_restart_budget_exhausted_fails_typed_not_hangs(self):
+        """A permanently-broken engine must terminate, not hang: the slot
+        dies after max_restarts and queued work fails NoEngineAvailable
+        (or the redispatch budget fails it with EngineStopped)."""
+        armed = {"on": True}
+
+        def always_crash(config, metrics):
+            plan = SleepyPlan(config, metrics=metrics, delay_s=0.001)
+
+            def infer(x):
+                raise _Boom("permanently broken")
+
+            plan.infer = infer
+            return plan
+
+        r = Router(RouterConfig(max_restarts=1, max_redispatch=2))
+        r.add_engine("e0", always_crash, ServiceConfig(max_queue=1))
+        r.start()
+        futs = [r.submit(i) for i in range(4)]
+        for f in futs:
+            with pytest.raises((NoEngineAvailable, EngineStopped)):
+                f.result(timeout=30)
+        r.drain_and_stop(timeout=30)
+        assert r.stats["engines"]["e0"]["dead"] is True
+
+    def test_engine_drain_and_stop_returns_leftovers(self):
+        """The engine satellite: drain_and_stop() RETURNS the items the
+        loop could not complete after a crash (and [] on a graceful
+        drain), so supervisors re-enqueue without reading private state."""
+        # Graceful: everything completes, nothing handed back.
+        served = []
+        eng = AsyncEngine(
+            SleepyPlan(ServiceConfig(), served=served),
+            ServiceConfig(),
+        ).start()
+        futs = [eng.submit(i) for i in range(3)]
+        assert eng.drain_and_stop(timeout=10) == []
+        assert [f.result(timeout=1)[1] for f in futs] == [0, 1, 2]
+
+        # Crash: the in-flight item and the still-queued inbox come back.
+        class CrashFirst(SleepyPlan):
+            def infer(self, x):
+                raise _Boom("down")
+
+        eng = AsyncEngine(CrashFirst(ServiceConfig()), ServiceConfig())
+        futs = [eng.submit(i) for i in range(3)]
+        eng.start()
+        deadline = time.perf_counter() + 10
+        while not eng.stopped and time.perf_counter() < deadline:
+            time.sleep(0.005)
+        leftover = eng.drain_and_stop(timeout=10)
+        assert sorted(int(x) for x in leftover) == [0, 1, 2]
+        for f in futs:
+            with pytest.raises(EngineStopped):
+                f.result(timeout=1)
+
+
+# --------------------------------------------------------------- telemetry
+class TestMetrics:
+    def test_service_metrics_snapshot_is_consistent(self):
+        """The snapshot satellite: counters are read under ONE lock
+        acquisition — a reader can never observe completed > submitted
+        even while a writer bumps both."""
+        m = ServiceMetrics()
+        stop = threading.Event()
+
+        def writer():
+            while not stop.is_set():
+                m.submitted.inc()
+                m.completed.inc()
+
+        t = threading.Thread(target=writer)
+        t.start()
+        try:
+            for _ in range(2000):
+                snap = m.snapshot()
+                assert snap["completed"] <= snap["submitted"], snap
+        finally:
+            stop.set()
+            t.join()
+
+    def test_snapshot_includes_histogram_percentiles(self):
+        m = ServiceMetrics()
+        for v in (0.001, 0.002, 0.003):
+            m.queue_wait_s.observe(v)
+        snap = m.snapshot()
+        assert snap["queue_wait_s"]["count"] == 3
+        assert snap["queue_wait_s"]["p50"] == pytest.approx(0.002)
+
+    def test_router_metrics_engine_bundle_survives_restart(self):
+        from repro.runtime import RouterMetrics
+
+        rm = RouterMetrics()
+        a = rm.register_engine("e0")
+        a.queue_wait_s.observe(0.5)
+        b = rm.register_engine("e0")  # hot restart re-register
+        assert b is a  # histograms (the scheduling signal) survive
+
+
+# ------------------------------------------------------------- decode fleet
+@pytest.mark.slow
+class TestDecodeFleet:
+    def test_serve_fleet_matches_single_engine_tokens(self):
+        """2 decode engines over SHARED params produce the same greedy
+        tokens as the single-engine path."""
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+
+        cfg = get_smoke_config("yi-9b")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+
+        def reqs():
+            rng = np.random.default_rng(3)
+            return [
+                Request(
+                    rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                    max_new_tokens=4,
+                )
+                for i in range(6)
+            ]
+
+        sync = serve_model(model, params,
+                           ServiceConfig(max_batch=2, max_seq=48))
+        for q in reqs():
+            sync.submit(q)
+        ref = {c.rid: c.tokens.tolist() for c in sync.drain()}
+
+        router = serve_fleet(
+            model, params,
+            ServiceConfig(max_batch=2, max_seq=48,
+                          router=RouterConfig(
+                              tenants={"a": TenantConfig(),
+                                       "b": TenantConfig(weight=2)})),
+            fleet=2,
+        )
+        futs = {
+            q.rid: router.submit(q, tenant="ab"[q.rid % 2],
+                                 deadline_s=120.0)
+            for q in reqs()
+        }
+        got = {rid: f.result(timeout=120).tokens.tolist()
+               for rid, f in futs.items()}
+        router.drain_and_stop(timeout=60)
+        assert got == ref
+        snap = router.metrics.snapshot()
+        served = [e["completed"] for e in snap["engines"].values()]
+        assert sum(served) == 6 and len(served) == 2
