@@ -1,0 +1,157 @@
+"""Continual serving tier: recovery under label shift + inference overhead.
+
+Two questions, one benchmark module (PR 8):
+
+* **Accuracy recovery under shift** — prequential accuracy while the label
+  distribution shifts mid-stream ((y+1) mod C).  Frozen serving stays at
+  ~0 on the shifted labels forever; the continual tier (rollback off — the
+  shift is the new ground truth) adapts via micro-batch Hebbian updates +
+  adapter merges.  Reported: post-shift accuracy over the final quarter of
+  the stream for both modes, plus how many feedback samples the online
+  tier needed to cross 50% on the new labels.
+* **Inference p95 overhead** — per-row ``infer()`` wall-time p95 on the
+  plain batched plan vs the continual plan with feedback interleaving
+  (2 learns per infer, the serving engine's mixed-traffic pattern).  The
+  update path is a tiny jitted EWMA step, so the interleaved p95 should
+  stay within a small factor of frozen serving.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.bench_common import emit
+from repro.core import (
+    DenseLayer,
+    ExecutionConfig,
+    Network,
+    StructuralPlasticityLayer,
+    UnitLayout,
+    onehot_layout,
+)
+from repro.data import complementary_code, mnist_like
+from repro.runtime import ContinualConfig, Feedback, ServiceConfig
+
+N_CLASSES = 4
+
+
+def fitted(seed=0):
+    ds = mnist_like(
+        n_train=256, n_test=64, n_features=32, seed=seed,
+        n_classes=N_CLASSES, prototypes_per_class=2, noise=0.05,
+        informative_fraction=1.0,
+    )
+    x, layout = complementary_code(ds.x_train)
+    xs = np.asarray(x, np.float32)
+    net = Network(seed=seed).add(
+        StructuralPlasticityLayer(
+            layout, UnitLayout(4, 8), fan_in=16, lam=0.05, gain=4.0
+        )
+    ).add(DenseLayer(UnitLayout(4, 8), onehot_layout(N_CLASSES), lam=0.05))
+    compiled = net.compile(ExecutionConfig())
+    compiled.fit((xs, ds.y_train), epochs_hidden=4, epochs_readout=4,
+                 batch_size=64)
+    return compiled, xs, np.asarray(ds.y_train)
+
+
+def continual_cfg(**kw):
+    base = dict(
+        update_batch=4, merge_every=2, update_budget=32, drift_window=16,
+        drift_min_samples=8, drift_threshold=10.0,  # detection off here
+        merge_strategy="replace", rollback=False,
+    )
+    base.update(kw)
+    return ServiceConfig(continual=ContinualConfig(**base))
+
+
+def recovery_under_shift(n_stream=192):
+    """Prequential accuracy on shifted labels: frozen vs online."""
+    compiled, xs, ys = fitted()
+    flipped = (ys + 1) % N_CLASSES
+
+    # Frozen reference: same prequential protocol, learning disabled by
+    # an infinite update budget trigger (update_batch larger than the
+    # stream, so no micro-batch ever applies).
+    frozen = compiled.serve(continual_cfg(update_batch=n_stream + 1))
+    frozen_hits = [
+        frozen.plan.learn(
+            Feedback(xs[k % 256], int(flipped[k % 256]))
+        )["correct"]
+        for k in range(n_stream)
+    ]
+    frozen.close()
+
+    compiled2, xs2, ys2 = fitted()
+    flipped2 = (ys2 + 1) % N_CLASSES
+    online = compiled2.serve(continual_cfg())
+    online_hits = [
+        online.plan.learn(
+            Feedback(xs2[k % 256], int(flipped2[k % 256]))
+        )["correct"]
+        for k in range(n_stream)
+    ]
+    online.close()
+
+    q = n_stream // 4
+    emit("continual_frozen_postshift_acc", float(np.mean(frozen_hits[-q:])),
+         "accuracy", "frozen serving, final quarter of shifted stream")
+    emit("continual_online_postshift_acc", float(np.mean(online_hits[-q:])),
+         "accuracy", "online tier, final quarter of shifted stream")
+    window = 16
+    to_half = -1
+    for k in range(window, n_stream + 1):
+        if np.mean(online_hits[k - window:k]) >= 0.5:
+            to_half = k
+            break
+    emit("continual_samples_to_half_acc", float(to_half), "samples",
+         f"feedback samples until rolling-{window} accuracy >= 0.5")
+
+
+def inference_overhead(n_rows=256):
+    """Per-row infer() wall-time p95: frozen batched plan vs continual
+    plan with interleaved feedback (2 learns : 1 infer)."""
+    compiled, xs, ys = fitted()
+    svc = compiled.serve(ServiceConfig(plan="batched"))
+    svc.predict(xs[0])  # warm the row-shaped traces
+    ts = []
+    for k in range(n_rows):
+        t0 = time.perf_counter()
+        svc.predict(xs[k % 256])
+        ts.append(time.perf_counter() - t0)
+    p95_frozen = float(np.percentile(np.asarray(ts) * 1e3, 95))
+    svc.close()
+
+    compiled2, xs2, ys2 = fitted()
+    svc2 = compiled2.serve(continual_cfg())
+    # Warm the learn path (first micro-batch + merge cell traces).
+    for k in range(12):
+        svc2.plan.learn(Feedback(xs2[k], int(ys2[k])))
+    ts2 = []
+    for k in range(n_rows):
+        for j in range(2):
+            svc2.plan.learn(
+                Feedback(xs2[(2 * k + j) % 256], int(ys2[(2 * k + j) % 256]))
+            )
+        t0 = time.perf_counter()
+        svc2.plan.infer(xs2[k % 256])
+        ts2.append(time.perf_counter() - t0)
+    p95_online = float(np.percentile(np.asarray(ts2) * 1e3, 95))
+    svc2.close()
+
+    emit("continual_infer_p95_frozen", p95_frozen, "ms",
+         "per-row predict, frozen batched plan")
+    emit("continual_infer_p95_online", p95_online, "ms",
+         "per-row infer with 2:1 interleaved Hebbian feedback")
+    if p95_frozen > 0:
+        emit("continual_infer_p95_overhead", p95_online / p95_frozen, "x",
+             "online/frozen p95 ratio")
+
+
+def main():
+    recovery_under_shift()
+    inference_overhead()
+
+
+if __name__ == "__main__":
+    main()

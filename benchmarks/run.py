@@ -9,6 +9,7 @@
   issue4 bench_deep              depth sweep: project-once vs fused phases
   issue5 bench_serving_async     async engine vs whole-queue drain (Poisson)
   issue7 bench_router            Router fabric: multi-tenant p99, crash/restart
+  issue8 bench_continual         online-learning recovery under label shift
   extra  bench_kernels           kernel-level roofline projections
 
 Prints ``name,value,unit,derived`` CSV rows; `python -m benchmarks.run`.
@@ -29,6 +30,7 @@ MODULES = [
     "bench_deep",
     "bench_serving_async",
     "bench_router",
+    "bench_continual",
     "bench_kernels",
     "bench_scaling",
 ]

@@ -87,6 +87,7 @@ DEFAULT_HOT_MODULES: Tuple[str, ...] = (
     "repro/runtime/service.py",
     "repro/runtime/engine.py",
     "repro/runtime/router.py",
+    "repro/runtime/continual.py",
     "repro/runtime/plans.py",
     "repro/runtime/epoch_engine.py",
     "repro/runtime/program.py",

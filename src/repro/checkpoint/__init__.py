@@ -7,10 +7,10 @@ from repro.checkpoint.store import (
     restore_checkpoint,
     save_checkpoint,
 )
-from repro.checkpoint.network import load_network, save_network
+from repro.checkpoint.network import load_adapters, load_network, save_network
 
 __all__ = [
     "AsyncCheckpointer", "latest_checkpoint", "list_checkpoints",
     "load_manifest", "restore_checkpoint", "save_checkpoint",
-    "load_network", "save_network",
+    "load_adapters", "load_network", "save_network",
 ]

@@ -8,8 +8,11 @@ shuffle-RNG state in the manifest's ``extra`` metadata — enough to resume
 
 Layout (flat keys inside arrays.npz):
 
-    layers/<i>/marginals/ci ...   per-layer LayerState leaves
-    readout/w, readout/b          hybrid readout params (when present)
+    layers/<i>/marginals/ci ...      per-layer LayerState leaves
+    readout/w, readout/b             hybrid readout params (when present)
+    adapters/<tenant>/marginals/...  per-tenant continual-learning adapter
+                                     LayerStates (when the continual tier
+                                     snapshots on merge)
 
 Restore validates layer-leaf shapes against the target network's templates,
 so loading a checkpoint into a mismatched architecture fails loudly.  The
@@ -19,7 +22,8 @@ momentum; a resumed fit re-initializes it).
 from __future__ import annotations
 
 import os
-from typing import Any, List, Optional, Sequence, Tuple
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -31,6 +35,10 @@ from repro.checkpoint.store import (
 )
 
 _VERSION = 1
+
+# Tenant names become flat array keys (``adapters/<tenant>/...``) — restrict
+# them so a name can never alias another key's path segments.
+_TENANT_RE = re.compile(r"^[A-Za-z0-9._-]+$")
 
 
 def _network_tree(layer_states: Sequence[Any], readout: Optional[dict]) -> dict:
@@ -46,18 +54,55 @@ def save_network(
     state,
     rng_state: Optional[dict] = None,
     retain: int = 3,
+    adapters: Optional[Dict[str, Any]] = None,
+    adapter_layer: Optional[int] = None,
 ) -> str:
-    """Atomically write a NetworkState (+ host RNG) checkpoint."""
+    """Atomically write a NetworkState (+ host RNG) checkpoint.
+
+    adapters: optional ``tenant -> LayerState`` map from the continual tier;
+    each adapter is a fork of layer ``adapter_layer`` and is stored under
+    ``adapters/<tenant>/...`` so a base+adapters snapshot is ONE atomic
+    manifest (the rollback unit).
+    """
     extra = {
         "network_ckpt_version": _VERSION,
         "n_layers": len(state.layers),
         "has_readout": state.readout is not None,
         "rng_state": rng_state,
     }
-    return save_checkpoint(
-        directory, step, _network_tree(state.layers, state.readout),
-        retain=retain, extra=extra,
-    )
+    tree = _network_tree(state.layers, state.readout)
+    if adapters:
+        for tenant in adapters:
+            if not _TENANT_RE.match(tenant):
+                raise ValueError(
+                    f"tenant name {tenant!r} is not checkpoint-safe "
+                    "(expected [A-Za-z0-9._-]+)"
+                )
+        tree["adapters"] = dict(adapters)
+        extra["adapter_tenants"] = sorted(adapters)
+        extra["adapter_layer"] = adapter_layer
+    return save_checkpoint(directory, step, tree, retain=retain, extra=extra)
+
+
+def load_adapters(path: str, template: Any) -> Dict[str, Any]:
+    """Restore the per-tenant adapter LayerStates from a network checkpoint.
+
+    template: the adapted layer's current LayerState (shapes + structure).
+    Returns ``{}`` for checkpoints written without adapters.
+    """
+    manifest = load_manifest(path)
+    extra = manifest.get("extra", {})
+    if extra.get("network_ckpt_version") != _VERSION:
+        raise ValueError(f"{path} is not a network checkpoint")
+    tenants = extra.get("adapter_tenants") or []
+    if not tenants:
+        return {}
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    return {
+        t: restore_into_template(flat, template, prefix=f"adapters/{t}/")
+        for t in tenants
+    }
 
 
 def load_network(

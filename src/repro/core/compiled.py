@@ -601,6 +601,13 @@ class CompiledNetwork:
             layers = list(self.state.layers)
             layers[li] = state
             self.state = NetworkState(tuple(layers), self.state.readout)
+            # Identity purging would drop the now-stale cached levels above
+            # this layer lazily at the next level() call; invalidate them
+            # eagerly so the adoption itself releases their device/host
+            # bytes (and a served evaluate() right after close() can never
+            # race a stale entry).
+            if self.activations is not None:
+                self.activations.invalidate_above(li)
 
         # The session's default factories already build exactly the cells we
         # want from `bound`; only the shared LRUs and adoption are injected.
@@ -640,15 +647,22 @@ class CompiledNetwork:
         )
 
         config = config if config is not None else ServiceConfig()
-        plan_name = config.plan or "batched"
+        plan_name = config.plan or (
+            "continual" if config.continual is not None else "batched"
+        )
         if plan_name == "batched":
             plan = BatchedPlan(self, config)
         elif plan_name == "streaming":
             plan = StreamingPlan(self, config)
+        elif plan_name == "continual":
+            from repro.runtime.continual import ContinualPlan
+
+            plan = ContinualPlan(self, config)
         else:
             raise ValueError(
-                f"CompiledNetwork.serve supports plans 'batched'/'streaming';"
-                f" {plan_name!r} serves token decoding (use serve_model)"
+                f"CompiledNetwork.serve supports plans 'batched'/'streaming'"
+                f"/'continual'; {plan_name!r} serves token decoding (use "
+                "serve_model)"
             )
         service = InferenceService(plan, config)
         if config.async_mode:

@@ -4,8 +4,10 @@
 # (checkpoint/restart, stragglers, elastic restore), and the serving
 # subsystem (ServiceConfig -> InferenceService -> ServePlan: batched /
 # fused slot-batched decode / streaming), with the async engine
-# (continuous batching + futures), latency telemetry, and the Router
-# serving fabric (per-tenant SLO scheduling over N engines) on top.
+# (continuous batching + futures), latency telemetry, the Router
+# serving fabric (per-tenant SLO scheduling over N engines), and the
+# continual-learning tier (online Hebbian updates under live traffic with
+# per-tenant adapters, drift detection, and snapshot/rollback) on top.
 from repro.runtime.activations import ActivationStore, store_for
 from repro.runtime.engine import AsyncEngine, EngineStopped, QueueFull
 from repro.runtime.epoch_engine import (
@@ -21,6 +23,7 @@ from repro.runtime.epoch_engine import (
 )
 from repro.runtime.metrics import (
     Counter,
+    DriftWindow,
     Gauge,
     Histogram,
     RouterMetrics,
@@ -65,11 +68,30 @@ from repro.runtime.service import (
 from repro.runtime.serve_loop import ServeSession
 from repro.runtime.train_loop import TrainLoopConfig, TrainLoopResult, train_loop
 
+# The continual tier imports repro.core.compiled (NetworkState,
+# build_forward), and core.compiled imports repro.runtime.plans — an
+# eager import here would re-enter core.compiled while it is still
+# initializing.  PEP 562 defers the continual names until first access.
+_CONTINUAL_NAMES = (
+    "ContinualConfig", "ContinualPlan", "DriftDetected", "Feedback",
+    "MERGE_STRATEGIES",
+)
+
+
+def __getattr__(name):
+    if name in _CONTINUAL_NAMES:
+        from repro.runtime import continual
+
+        return getattr(continual, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
     "ActivationStore", "store_for",
     "AsyncEngine", "EngineStopped", "QueueFull",
-    "Counter", "Gauge", "Histogram", "ServiceMetrics", "TenantMetrics",
-    "RouterMetrics", "format_latency_line",
+    "ContinualConfig", "ContinualPlan", "DriftDetected", "Feedback",
+    "MERGE_STRATEGIES",
+    "Counter", "DriftWindow", "Gauge", "Histogram", "ServiceMetrics",
+    "TenantMetrics", "RouterMetrics", "format_latency_line",
     "Router", "RouterConfig", "RouterError", "RouterStopped", "TenantConfig",
     "TenantQueueFull", "DeadlineExceeded", "NoEngineAvailable",
     "epoch_sharding", "gather_batch", "hidden_epoch_cached_fn",

@@ -137,6 +137,24 @@ class ActivationStore:
         """Drop every cached level (e.g. before freeing the network)."""
         self._entries.clear()
 
+    def invalidate_above(self, level: int) -> int:
+        """Eagerly drop every cached level strictly above ``level`` — for
+        every dataset — returning the number of entries dropped.
+
+        Identity purging (:meth:`_purge`) already guarantees correctness
+        lazily: an entry projected from superseded state objects can never
+        be *served* again.  But it only runs at the next :meth:`level` call,
+        so a state adoption (streaming-session close, continual merge or
+        rollback) would otherwise leave the dead projections pinning device/
+        host bytes until someone happens to ask for a level.  Adoption paths
+        call this to release those bytes at the adoption itself.
+        """
+        stale = [k for k in self._entries if k[1] > level]
+        for k in stale:
+            del self._entries[k]
+            self.stats["evictions"] += 1
+        return len(stale)
+
     @property
     def device_bytes(self) -> int:
         return sum(e.nbytes for e in self._entries.values() if not e.on_host)

@@ -225,6 +225,8 @@ class AsyncEngine:
                 self._loop_decode()
             elif self.plan.name == "batched":
                 self._loop_batched()
+            elif self.plan.name == "continual":
+                self._loop_continual()
             else:
                 self._loop_streaming()
         except BaseException as e:
@@ -418,6 +420,45 @@ class AsyncEngine:
             except BaseException as e:
                 # Loop-killing crash mid-item: fail the claimed future and
                 # hand the item back through the restart seam.
+                with self._cv:
+                    self._leftover.append(w.item)
+                self._fail(
+                    w,
+                    self._crash_exc(
+                        "engine loop crashed with an item in flight", e
+                    ),
+                )
+                raise
+
+    def _loop_continual(self) -> None:
+        """Update/infer interleave on the ONE loop thread: labeled Feedback
+        items run the plan's online-learning step (micro-batch Hebbian
+        update, merge, drift safety loop), everything else is per-item
+        inference — so a rollback can never race an in-flight prediction,
+        and every future (feedback acks included) resolves in arrival
+        order."""
+        from repro.runtime.continual import Feedback
+
+        while True:
+            with self._cv:
+                while not self._inbox and self._state == "running":
+                    self._cv.wait(self._POLL_S)
+                if not self._inbox and self._state != "running":
+                    break
+                w = self._inbox.popleft()
+                self.metrics.queue_depth.set(len(self._inbox))
+            if not self._claim(w):
+                continue  # caller cancelled while queued
+            self.metrics.queue_wait_s.observe(time.perf_counter() - w.t_submit)
+            try:
+                if isinstance(w.item, Feedback):
+                    self._complete(w, self.plan.learn(w.item))
+                else:
+                    # jaxlint: allow[JL001] reason=per-item host payload staged once at the h2d boundary
+                    self._complete(w, self.plan.infer(np.asarray(w.item)))
+            except Exception as e:  # noqa: BLE001 — per-item failure
+                w.future.set_exception(e)
+            except BaseException as e:
                 with self._cv:
                     self._leftover.append(w.item)
                 self._fail(

@@ -34,7 +34,7 @@ exactly (asserted in tests).
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -158,6 +158,131 @@ class Histogram:
         }
 
 
+class DriftWindow:
+    """Windowed accuracy/confidence tracker for online-learning drift checks.
+
+    The continual tier (:mod:`repro.runtime.continual`) evaluates every
+    feedback sample *prequentially* — predict first, then learn — and records
+    whether the prediction was correct plus its confidence here.  Two views
+    exist side by side:
+
+    * the **current window**: a fixed-size ring of the most recent
+      observations since the last reset (resets happen on merge adoption and
+      on rollback, so the window always measures the *currently served*
+      state);
+    * the **baseline**: the frozen summary of the last window that was
+      measured against a known-good state (frozen on first fill and
+      re-frozen when a merge candidate is confirmed healthy).
+
+    ``drifted()`` is the one decision surface: the current window has at
+    least ``min_samples`` observations AND its accuracy fell more than
+    ``threshold`` below the baseline's.  The continual plan turns a True
+    here into a typed ``DriftDetected`` plus (if a merge is pending
+    confirmation) an automatic rollback.
+
+    Like every instrument in this module the lock arrives via the
+    constructor so one bundle snapshot is point-in-time consistent.
+    """
+
+    _JAXLINT_LOCKS = ("_lock",)
+
+    def __init__(
+        self,
+        window: int = 64,
+        min_samples: int = 16,
+        threshold: float = 0.2,
+        lock: Optional[Any] = None,
+    ) -> None:
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        if not 1 <= min_samples <= window:
+            raise ValueError(
+                f"min_samples must be in [1, window={window}], got {min_samples}"
+            )
+        if threshold <= 0:
+            raise ValueError(f"threshold must be > 0, got {threshold}")
+        self._lock = lock if lock is not None else threading.Lock()
+        self.window = int(window)
+        self.min_samples = int(min_samples)
+        self.threshold = float(threshold)
+        self._acc = np.zeros(window, np.float64)
+        self._conf = np.zeros(window, np.float64)
+        self._n = 0  # observations since the last reset
+        # Frozen (accuracy, confidence-mean, samples) of the last-good window.
+        self._baseline: Optional[Tuple[float, float, int]] = None
+
+    def observe(self, correct: bool, confidence: float) -> None:
+        with self._lock:
+            i = self._n % self.window
+            self._acc[i] = 1.0 if correct else 0.0
+            self._conf[i] = float(confidence)
+            self._n += 1
+
+    def _current_locked(self) -> Tuple[float, float, int]:
+        m = min(self._n, self.window)
+        if m == 0:
+            return 0.0, 0.0, 0
+        return float(self._acc[:m].mean()), float(self._conf[:m].mean()), m
+
+    @property
+    def samples(self) -> int:
+        with self._lock:
+            return min(self._n, self.window)
+
+    @property
+    def baseline_samples(self) -> int:
+        with self._lock:
+            return 0 if self._baseline is None else self._baseline[2]
+
+    def freeze_baseline(self) -> None:
+        """Adopt the current window as the known-good baseline and reset the
+        current window (the next observations measure a *new* state)."""
+        with self._lock:
+            self._baseline = self._current_locked()
+            self._n = 0
+
+    def reset_current(self) -> None:
+        """Discard the current window, keep the baseline (rollback path,
+        merge adoption: the served state just changed)."""
+        with self._lock:
+            self._n = 0
+
+    def drifted(self) -> bool:
+        with self._lock:
+            if self._baseline is None or self._baseline[2] == 0:
+                return False
+            acc, _conf, m = self._current_locked()
+            if m < self.min_samples:
+                return False
+            return (self._baseline[0] - acc) > self.threshold
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            acc, conf, m = self._current_locked()
+            base = self._baseline
+            vals = self._conf[: min(self._n, self.window)]
+            p50, p95 = (
+                (float(x) for x in np.percentile(vals, (50, 95)))
+                if m
+                else (0.0, 0.0)
+            )
+        out: Dict[str, Any] = {
+            "samples": m,
+            "accuracy": acc,
+            "confidence": conf,
+            "confidence_p50": p50,
+            "confidence_p95": p95,
+            "baseline_accuracy": 0.0 if base is None else base[0],
+            "baseline_confidence": 0.0 if base is None else base[1],
+            "baseline_samples": 0 if base is None else base[2],
+        }
+        out["drift"] = (
+            out["baseline_accuracy"] - acc if base is not None and m else 0.0
+        )
+        out["drifted"] = self.drifted()
+        return out
+
+
 class ServiceMetrics:
     """The per-service telemetry bundle, shared by plan + service + engine.
 
@@ -173,6 +298,14 @@ class ServiceMetrics:
                          request (inter-token latency).
       ``batch_s``:       one padded micro-batch forward (batched plans).
       ``e2e_s``:         submit -> completion, the caller-visible latency.
+      ``update_s``:      one jitted online Hebbian micro-batch update
+                         (continual plans only; empty otherwise).
+
+    The online-learning tier adds its lifecycle counters (``online_updates``
+    applied, ``updates_shed`` by budget, ``merges``, ``rollbacks``,
+    ``drift_events``) and a :class:`DriftWindow` under the same bundle lock;
+    all stay zero/empty unless a :class:`~repro.runtime.continual.
+    ContinualPlan` is serving.
 
     Every instrument shares the bundle's ONE re-entrant lock, so
     :meth:`snapshot` is a single lock acquisition and the returned dict is a
@@ -182,7 +315,14 @@ class ServiceMetrics:
 
     HISTOGRAMS: Sequence[str] = (
         "queue_wait_s", "prefill_s", "decode_step_s", "batch_s", "e2e_s",
+        "update_s",
     )
+    ONLINE_COUNTERS: Sequence[str] = (
+        "online_updates", "updates_shed", "merges", "rollbacks",
+        "drift_events",
+    )
+
+    _JAXLINT_LOCKS = ("_lock",)
 
     def __init__(self, window: int = 2048) -> None:
         self._lock = threading.RLock()
@@ -192,9 +332,25 @@ class ServiceMetrics:
         self.queue_depth = Gauge(lock=self._lock)
         for name in self.HISTOGRAMS:
             setattr(self, name, Histogram(window, lock=self._lock))
+        for name in self.ONLINE_COUNTERS:
+            setattr(self, name, Counter(lock=self._lock))
+        self.drift = DriftWindow(lock=self._lock)
 
     def hist(self, name: str) -> Histogram:
         return getattr(self, name)
+
+    def configure_drift(
+        self, window: int, min_samples: int, threshold: float
+    ) -> DriftWindow:
+        """Replace the drift window with one sized by a ``ContinualConfig``
+        (the default instance exists so ``snapshot()`` is shape-stable even
+        on plans that never learn)."""
+        with self._lock:
+            self.drift = DriftWindow(
+                window=window, min_samples=min_samples, threshold=threshold,
+                lock=self._lock,
+            )
+            return self.drift
 
     def snapshot(self) -> Dict[str, Any]:
         """A consistent point-in-time view: counters AND histogram
@@ -210,6 +366,9 @@ class ServiceMetrics:
             }
             for name in self.HISTOGRAMS:
                 out[name] = self.hist(name).snapshot()
+            for name in self.ONLINE_COUNTERS:
+                out[name] = getattr(self, name).value
+            out["drift"] = self.drift.snapshot()
         return out
 
 
@@ -219,16 +378,17 @@ class TenantMetrics:
     ``submitted``/``completed`` bracket the happy path; the shed counters
     split rejections by cause (the Router never FIFO-blind-drops):
     ``shed_queue_full`` (bounced off the tenant's bounded queue),
-    ``shed_deadline`` (expired before dispatch), ``requeued`` (bounced off a
-    crashed engine and put back), ``failed`` (dispatch errors surfaced on the
-    future).  ``sched_wait_s`` is router-queue wait: submit -> hand-off into
+    ``shed_deadline`` (expired before dispatch), ``shed_drift`` (refused
+    because the target continual engine's drift window reads degraded),
+    ``requeued`` (bounced off a crashed engine and put back), ``failed``
+    (dispatch errors surfaced on the future).  ``sched_wait_s`` is router-queue wait: submit -> hand-off into
     an engine inbox; ``e2e_s`` is submit -> result on the caller's future
     (the per-tenant SLO view, spanning redispatches across restarts).
     """
 
     COUNTERS: Sequence[str] = (
         "submitted", "completed", "shed_queue_full", "shed_deadline",
-        "requeued", "failed",
+        "shed_drift", "requeued", "failed",
     )
     HISTOGRAMS: Sequence[str] = ("sched_wait_s", "e2e_s")
 
@@ -318,7 +478,10 @@ class RouterMetrics:
 
 def format_latency_line(snapshot: Dict[str, Any], *names: str) -> str:
     """One CLI-friendly line: ``queue_wait p50=1.2ms p95=3.4ms p99=5.6ms``
-    per requested histogram (skipping empty ones)."""
+    per requested histogram (skipping empty ones).  When the snapshot
+    carries online-learning activity (any continual-tier counter nonzero),
+    a trailing ``online updates=.. merges=.. rollbacks=.. drift=..`` segment
+    is appended; frozen-serving snapshots render exactly as before."""
     parts = []
     for name in names or ServiceMetrics.HISTOGRAMS:
         h = snapshot.get(name)
@@ -329,6 +492,19 @@ def format_latency_line(snapshot: Dict[str, Any], *names: str) -> str:
             f"{label} p50={h['p50'] * 1e3:.2f}ms p95={h['p95'] * 1e3:.2f}ms "
             f"p99={h['p99'] * 1e3:.2f}ms"
         )
+    online = []
+    for key, label in (
+        ("online_updates", "updates"),
+        ("updates_shed", "shed"),
+        ("merges", "merges"),
+        ("rollbacks", "rollbacks"),
+        ("drift_events", "drift"),
+    ):
+        v = snapshot.get(key)
+        if v:
+            online.append(f"{label}={v}")
+    if online:
+        parts.append("online " + " ".join(online))
     return " | ".join(parts) if parts else "no latency samples"
 
 
@@ -336,6 +512,7 @@ __all__ = [
     "Counter",
     "Gauge",
     "Histogram",
+    "DriftWindow",
     "ServiceMetrics",
     "TenantMetrics",
     "RouterMetrics",

@@ -194,13 +194,21 @@ def _timed(history: List[dict], entry: dict, t0: float, result) -> None:
     history.append(entry)
 
 
-def _check_finite(net, tree, where: str) -> None:
+def check_finite(net, tree, where: str) -> None:
     """Strict-mode checkify guard on a freshly-updated state pytree — the
     BCPNN EWMA traces and log-ratio weights are where a runaway learning
     rate or zero marginal first shows up as NaN/Inf.  No-op unless the
-    network was compiled with ``ExecutionConfig(strict=True)``."""
+    network was compiled with ``ExecutionConfig(strict=True)``.
+
+    Public because every *driver* of partial-fit updates shares it: the
+    phase runners below and the continual tier's online micro-batch
+    updates (:mod:`repro.runtime.continual`)."""
     if getattr(net, "_finite_check", None) is not None:
         net._finite_check(tree, where=where)
+
+
+# The phase runners predate the public name.
+_check_finite = check_finite
 
 
 def _phase_input(net, level: int, states, x, batch_size, history):
@@ -320,4 +328,5 @@ __all__ = [
     "ProgramResult",
     "compile_program",
     "run_program",
+    "check_finite",
 ]

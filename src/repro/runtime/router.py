@@ -39,6 +39,14 @@ The scheduling model, from the outside in:
   benchmark baseline.  Engine inboxes stay shallow (``max_queue`` on the
   engine's ServiceConfig) so queueing — and therefore policy — lives in
   the Router, not in FIFO inboxes.
+* **Continual-tier awareness.**  Engines serving the ``continual`` plan
+  (PR 8) hold per-tenant adapter state on their device, so the Router
+  pins each tenant to the first continual engine that served it
+  (``(pool, tenant) -> slot`` affinity; a full pinned engine HOLDS the
+  tenant's work rather than migrating it and abandoning the adapter).
+  While a continual engine's drift window reads degraded, its queued
+  work is shed with the typed ``DriftDetected`` instead of being fed to
+  a drifting model (``RouterConfig(shed_on_drift=False)`` opts out).
 * **Health tracking + hot restart.**  A crashed engine loop fails its
   futures with ``EngineStopped``; the Router's completion hook re-enqueues
   those requests (bounded by ``max_redispatch``) instead of surfacing the
@@ -80,6 +88,15 @@ __all__ = [
 ]
 
 ROUTING_POLICIES = ("p95", "round_robin")
+
+
+def _is_drift(exc: BaseException) -> bool:
+    """True when ``exc`` is the continual tier's DriftDetected (imported
+    lazily — the router must not pull the continual module in unless a
+    continual engine already produced such an exception)."""
+    from repro.runtime.continual import DriftDetected
+
+    return isinstance(exc, DriftDetected)
 
 
 class RouterError(RuntimeError):
@@ -175,6 +192,12 @@ class RouterConfig:
                     about one service time.  0 = pure work-conserving.
     poll_s:         scheduler idle wakeup (health checks + deadline sheds
                     happen at least this often).
+    shed_on_drift:  when True (default), queued work whose tenant is
+                    pinned to a continual engine that currently reads
+                    drifted (``plan.drifting``) is shed with the causal
+                    ``DriftDetected`` instead of dispatched — callers see
+                    a typed refusal while the plan's safety loop rolls
+                    back, never silent answers from a degraded model.
     """
 
     tenants: Mapping[str, TenantConfig] = dataclasses.field(
@@ -188,6 +211,7 @@ class RouterConfig:
     p95_refresh_s: float = 0.05
     spill_patience_s: float = 0.02
     poll_s: float = 0.02
+    shed_on_drift: bool = True
 
     def __post_init__(self):
         if self.routing not in ROUTING_POLICIES:
@@ -300,6 +324,11 @@ class Router:
         self._seq = 0
         self._dispatch_stamp = 0
         self._inflight = 0
+        # (pool, tenant) -> slot name.  Continual engines hold per-tenant
+        # adapter state on-device, so a tenant must keep landing on the
+        # engine that owns its adapter; entries are dropped when the slot
+        # dies (the adapter died with it).
+        self._affinity: Dict[Tuple[str, str], str] = {}
 
     # ---------------------------------------------------------------- fleet
     def add_engine(
@@ -603,6 +632,8 @@ class Router:
             tm = self.metrics.tenant(w.tenant)
             if isinstance(exc, DeadlineExceeded):
                 tm.shed_deadline.inc()
+            elif _is_drift(exc):
+                tm.shed_drift.inc()
             else:
                 tm.failed.inc()
             self._fail_future(w, exc)
@@ -724,7 +755,7 @@ class Router:
                 break
             if not heap:
                 continue
-            slot = self._slot_for_pool_locked(pool, now)
+            slot = self._slot_for_pool_locked(pool, now, tenant=t.name)
             if slot is None:
                 if self._pool_dead_locked(pool):
                     # Every slot exhausted its restart budget: fail the
@@ -742,6 +773,20 @@ class Router:
                             )
                         )
                 continue
+            if (
+                self.config.shed_on_drift
+                and getattr(slot.engine.plan, "drifting", False)
+            ):
+                # The tenant's continual engine reads degraded: refuse
+                # its whole backlog with the causal exception while the
+                # plan's safety loop rolls back, rather than serving
+                # answers from (or learning into) a drifting model.
+                exc = self._drift_exc_locked(slot)
+                while heap:
+                    _, work = heapq.heappop(heap)
+                    t.depth -= 1
+                    shed.append((work, exc))
+                continue
             if best_key is None or heap[0][0] < best_key:
                 best_key = heap[0][0]
                 best_pool, best_slot = pool, slot
@@ -753,14 +798,34 @@ class Router:
         tm.queue_depth.set(t.depth)
         self._dispatch_stamp += 1
         best_slot.last_used = self._dispatch_stamp
+        if best_pool == "continual":
+            # Adapter residency: this tenant's per-tenant LayerState now
+            # lives on this engine — pin its future traffic there.
+            self._affinity[(best_pool, t.name)] = best_slot.name
         return work, best_slot
+
+    @staticmethod
+    def _drift_exc_locked(slot: _EngineSlot) -> BaseException:
+        """Build the DriftDetected carried on sheds from a drifting
+        continual engine, from the slot's own drift telemetry."""
+        from repro.runtime.continual import DriftDetected
+
+        dw = slot.metrics.drift
+        snap = dw.snapshot()
+        baseline = snap.get("baseline_accuracy")
+        return DriftDetected(
+            baseline_accuracy=baseline if baseline is not None else 0.0,
+            accuracy=snap["accuracy"],
+            samples=snap["samples"],
+            threshold=dw.threshold,
+        )
 
     def _pool_dead_locked(self, pool: str) -> bool:
         slots = [s for s in self._slots.values() if s.pool == pool]
         return bool(slots) and all(s.dead for s in slots)
 
     def _slot_for_pool_locked(
-        self, pool: str, now: float
+        self, pool: str, now: float, tenant: Optional[str] = None
     ) -> Optional[_EngineSlot]:
         """The pool's best engine with inbox capacity: lowest cached p95
         queue-wait (telemetry-driven), tie-broken by inbox depth then
@@ -769,7 +834,32 @@ class Router:
         SLO-aware hold: under p95 routing, when every engine with capacity
         is ``spill_patience_s`` worse than the pool's best engine, returns
         None — the work waits (briefly) for the good engine rather than
-        spilling onto a degraded replica."""
+        spilling onto a degraded replica.
+
+        Tenant affinity: a ``(pool, tenant)`` pin (recorded when a
+        continual engine first serves the tenant) short-circuits
+        selection — the tenant's adapter state lives on that engine, so a
+        full or restarting pinned engine HOLDS the work (returns None)
+        instead of migrating it; only a dead pin (adapter gone for good)
+        is dropped and falls through to fresh selection."""
+        if tenant is not None:
+            pinned = self._affinity.get((pool, tenant))
+            if pinned is not None:
+                slot = self._slots.get(pinned)
+                if slot is None or slot.dead:
+                    # The adapter died with the engine: re-pinning
+                    # elsewhere restarts this tenant from the shared base.
+                    self._affinity.pop((pool, tenant), None)
+                else:
+                    engine = slot.engine
+                    if engine is None or engine.state != "running":
+                        return None  # restarting: hold, don't migrate
+                    if (
+                        slot.config.max_queue is not None
+                        and engine.inbox_depth >= slot.config.max_queue
+                    ):
+                        return None  # full: hold for the pinned engine
+                    return slot
         best = None
         best_key = None
         pool_best_p95 = None  # across ALL live slots, full or not

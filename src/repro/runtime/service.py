@@ -171,6 +171,12 @@ class ServiceConfig:
                 front door — ``serve_fleet()`` builds N engines over shared
                 params behind one Router (per-tenant queues, deadlines, hot
                 restart).  None = single-engine serving, unchanged.
+    continual:  a ``repro.runtime.continual.ContinualConfig`` enabling the
+                online-learning tier — the bound plan becomes
+                :class:`~repro.runtime.continual.ContinualPlan` (inference
+                unchanged; labeled ``Feedback`` items drive jitted Hebbian
+                adapter updates, merges, drift detection and rollback).
+                None = frozen serving, bit-identical to before.
     """
 
     max_batch: int = 4
@@ -185,8 +191,27 @@ class ServiceConfig:
     async_mode: bool = False
     strict: bool = False
     router: Optional[Any] = None
+    continual: Optional[Any] = None
 
     def __post_init__(self):
+        if self.continual is not None or self.plan == "continual":
+            # Lazy circular-import break (continual -> service for the plan
+            # base); importing registers ContinualPlan in SERVE_PLANS before
+            # the plan-name validation below runs.
+            from repro.runtime.continual import ContinualConfig
+
+            if self.continual is not None and not isinstance(
+                self.continual, ContinualConfig
+            ):
+                raise ValueError(
+                    f"continual must be a ContinualConfig, got "
+                    f"{type(self.continual).__name__}"
+                )
+            if self.plan not in (None, "continual"):
+                raise ValueError(
+                    f"continual learning serves through plan='continual', "
+                    f"got plan={self.plan!r}"
+                )
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         if self.layer < 0:
@@ -890,6 +915,16 @@ class InferenceService:
                 self.plan.feed(s)
             self.plan.flush()
             out = None
+        elif self.plan.name == "continual":
+            # Mixed traffic in arrival order: Feedback learns, anything
+            # else infers — one result per item, mirroring the async path.
+            from repro.runtime.continual import Feedback
+
+            out = [
+                self.plan.learn(s) if isinstance(s, Feedback)
+                else self.plan.infer(s)
+                for s in items
+            ]
         else:
             # jaxlint: allow[JL001] reason=submitted items are host objects; staging them is the h2d boundary
             out = self.plan.predict(np.stack([np.asarray(s) for s in items]))
