@@ -3,12 +3,51 @@
 The FPGA study's TPU-native reproduction: the full BCPNN datapath is rounded
 to each format at every stage boundary (repro.precision).  Expected shape of
 the curve (paper): BF20+ == f32, BF16 ~ -4%, BF15 partial, BF14 -> chance.
+
+Second sweep: the quantized *state* tier frontier — full-precision datapath
+with the MarginalState traces stored bf20/bf16 (``state_format=``, rounding
+fused into the one-dispatch ``fused_phase`` kernel epilogue).  Emits accuracy,
+fit wall time, and resident trace bytes per point, so the accuracy/memory
+trade reads straight off the rows.
 """
 from __future__ import annotations
+
+import time
 
 from benchmarks.bench_common import build_bcpnn, emit
 from repro.data import complementary_code, mnist_like
 from repro.precision import PrecisionPolicy
+
+
+def _state_bytes(compiled) -> int:
+    tot = 0
+    for s in compiled.state.layers:
+        for t in (s.marginals.ci, s.marginals.cj, s.marginals.cij):
+            tot += t.size * t.dtype.itemsize
+    return tot
+
+
+def _state_tier_frontier(ds, x_tr, x_te, layout):
+    from repro.core.compiled import ExecutionConfig
+
+    for name in ("fp32", "bf20", "bf16"):
+        sfmt = None if name == "fp32" else name
+        pol = PrecisionPolicy.named("fp32", state_format=sfmt)
+        cfg = ExecutionConfig(fused_phase=True, precision=pol)
+        compiled = build_bcpnn(layout).compile(cfg)
+        t0 = time.perf_counter()
+        compiled.fit(
+            (x_tr, ds.y_train), epochs_hidden=4, epochs_readout=4,
+            batch_size=128,
+        )
+        dt = time.perf_counter() - t0
+        acc = compiled.evaluate((x_te, ds.y_test))
+        nbytes = _state_bytes(compiled)
+        emit(f"state_tier_{name}_acc", acc, "accuracy",
+             "fused_phase one-kernel path")
+        emit(f"state_tier_{name}_fit_s", dt, "s")
+        emit(f"state_tier_{name}_trace_bytes", nbytes, "B",
+             f"cij dtype={compiled.state.layers[0].marginals.cij.dtype}")
 
 
 def main():
@@ -25,6 +64,8 @@ def main():
         )
         acc = net.evaluate((x_te, ds.y_test))
         emit(f"fig3_precision_{fmt}", acc, "accuracy")
+
+    _state_tier_frontier(ds, x_tr, x_te, layout)
 
 
 if __name__ == "__main__":

@@ -64,6 +64,10 @@ def main():
     ap.add_argument("--strict", action="store_true",
                     help="strict verification: transfer guard on every "
                          "dispatch, recompile sentinel, finite-value checks")
+    ap.add_argument("--fused-phase", action="store_true",
+                    help="one-dispatch training: each hidden batch runs as a "
+                         "single fused Pallas mega-kernel (interpret mode "
+                         "off-TPU; bit-exact with the unfused kernel path)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -81,7 +85,9 @@ def main():
 
     model = build_deep(layout, widths, fan_in)
     # project-once by default; --strict layers the hot-path guards on top
-    compiled = model.compile(ExecutionConfig(strict=args.strict))
+    compiled = model.compile(
+        ExecutionConfig(strict=args.strict, fused_phase=args.fused_phase)
+    )
 
     t0 = time.perf_counter()
     res = compiled.fit(

@@ -92,6 +92,8 @@ DEFAULT_HOT_MODULES: Tuple[str, ...] = (
     "repro/runtime/epoch_engine.py",
     "repro/runtime/program.py",
     "repro/core/compiled.py",
+    "repro/kernels/ops.py",
+    "repro/kernels/bcpnn_phase.py",
 )
 
 # Dotted-call suffixes that enter a trace; their first positional argument is

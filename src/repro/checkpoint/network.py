@@ -29,6 +29,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.store import (
+    decode_flat,
     load_manifest,
     restore_into_template,
     save_checkpoint,
@@ -99,6 +100,7 @@ def load_adapters(path: str, template: Any) -> Dict[str, Any]:
         return {}
     with np.load(os.path.join(path, "arrays.npz")) as z:
         flat = {k: z[k] for k in z.files}
+    flat = decode_flat(flat, manifest.get("dtypes"))
     return {
         t: restore_into_template(flat, template, prefix=f"adapters/{t}/")
         for t in tenants
@@ -136,6 +138,7 @@ def load_network(
         )
     with np.load(os.path.join(path, "arrays.npz")) as z:
         flat = {k: z[k] for k in z.files}
+    flat = decode_flat(flat, manifest.get("dtypes"))
 
     layer_states: List[Any] = [
         restore_into_template(flat, template, prefix=f"layers/{i}/")

@@ -46,6 +46,35 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+# np.savez cannot serialize ml_dtypes extension dtypes (bfloat16 — the
+# quantized-state storage tier), so those arrays are written as same-width
+# uint views; the manifest records the *logical* dtype and restore views the
+# bits back.  Identity for every native numpy dtype.
+_VIEW_ENCODED = {"bfloat16": np.uint16}
+
+
+def _encode_array(arr: np.ndarray) -> np.ndarray:
+    view = _VIEW_ENCODED.get(str(arr.dtype))
+    return arr.view(view) if view is not None else arr
+
+
+def _decode_array(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
+    if str(arr.dtype) != logical_dtype and logical_dtype in _VIEW_ENCODED:
+        import ml_dtypes
+
+        return arr.view(np.dtype(getattr(ml_dtypes, logical_dtype)))
+    return arr
+
+
+def decode_flat(
+    flat: Dict[str, np.ndarray], dtypes: Optional[Dict[str, str]]
+) -> Dict[str, np.ndarray]:
+    """Undo the uint-view encoding using the manifest's logical dtypes."""
+    if not dtypes:
+        return flat
+    return {k: _decode_array(v, dtypes.get(k, str(v.dtype))) for k, v in flat.items()}
+
+
 def save_checkpoint(
     directory: str,
     step: int,
@@ -66,7 +95,10 @@ def save_checkpoint(
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    np.savez(
+        os.path.join(tmp, "arrays.npz"),
+        **{k: _encode_array(v) for k, v in flat.items()},
+    )
     manifest = {
         "step": step,
         "keys": sorted(flat),
@@ -160,6 +192,7 @@ def restore_checkpoint(
     """
     with np.load(os.path.join(path, "arrays.npz")) as z:
         flat = {k: z[k] for k in z.files}
+    flat = decode_flat(flat, load_manifest(path).get("dtypes"))
     return restore_into_template(flat, template, shardings=shardings)
 
 

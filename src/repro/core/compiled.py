@@ -123,6 +123,15 @@ class ExecutionConfig:
                  paper's deployment-time FPGA precision choice.
     use_kernels: optional bool overriding every layer's Pallas-kernel flag
                  (None leaves the declared per-layer setting).
+    fused_phase: one-dispatch training — every hidden layer's per-batch
+                 Alg.1 cycle (forward + HCU softmax + EWMA + weights) runs
+                 as a single fused Pallas mega-kernel
+                 (repro.kernels.bcpnn_phase) instead of the three-kernel
+                 composition; bit-exact with the unfused kernel path in
+                 interpret mode.  Implies use_kernels=True (auto-enabled
+                 when left None; an explicit False raises).  Composes with
+                 the quantized state tier (state_format=) but not with a
+                 reduced-precision *datapath* policy.
     donate:      donate scan carries/epoch buffers on accelerators.
     cache_activations:    project-once training (default): at each phase
                  boundary the dataset is projected once through the frozen
@@ -145,6 +154,7 @@ class ExecutionConfig:
     trainer: Any = None
     precision: Any = None
     use_kernels: Optional[bool] = None
+    fused_phase: bool = False
     donate: bool = True
     cache_activations: bool = True
     activation_budget_mb: float = 512.0
@@ -165,6 +175,22 @@ class ExecutionConfig:
             object.__setattr__(
                 self, "precision", PrecisionPolicy.named(self.precision)
             )
+        if self.fused_phase:
+            if self.use_kernels is False:
+                raise ValueError(
+                    "fused_phase=True requires the Pallas kernels; drop "
+                    "use_kernels=False (or leave it None — fused_phase "
+                    "auto-enables it)"
+                )
+            if self.use_kernels is None:
+                object.__setattr__(self, "use_kernels", True)
+            if self.precision is not None and not self.precision.fmt.is_identity:
+                raise ValueError(
+                    "fused_phase is incompatible with a reduced-precision "
+                    f"datapath (precision fmt {self.precision.fmt.name!r}); "
+                    "use PrecisionPolicy.named('fp32', state_format=...) for "
+                    "the quantized state tier, which does compose"
+                )
 
     def bind_layer(self, layer):
         """A copy of ``layer`` with this config's precision/kernel choices
@@ -174,6 +200,11 @@ class ExecutionConfig:
             overrides["precision"] = self.precision
         if self.use_kernels is not None:
             overrides["use_kernels"] = self.use_kernels
+        # Only hidden layers get the fused phase: the supervised readout's
+        # post-activations are clamped to labels, so there is no forward +
+        # softmax to fuse into its update.
+        if self.fused_phase and isinstance(layer, StructuralPlasticityLayer):
+            overrides["fused_phase"] = True
         if not overrides:
             return layer
         bound = _shallow_copy(layer)
@@ -200,6 +231,24 @@ class CompiledNetwork:
             ),
             readout=None,
         )
+        # Quantized state tier: cast the initial marginals into the storage
+        # dtype at compile time, so jitted epoch scans carry a type-stable
+        # state from the very first batch (bf16-in -> bf16-out).
+        if any(
+            getattr(b.spec.precision, "has_state_tier", False)
+            for b in self.layers
+        ):
+            from repro.precision.policy import quantize_marginals
+
+            self.state = NetworkState(
+                layers=tuple(
+                    s._replace(
+                        marginals=quantize_marginals(s.marginals, b.spec.precision)
+                    )
+                    for b, s in zip(self.layers, self.state.layers)
+                ),
+                readout=self.state.readout,
+            )
         self.plan: ExecutionPlan = make_plan(
             self.config.engine, self.layers, donate=self.config.donate,
             strict=self.config.strict,

@@ -63,6 +63,24 @@ class BCPNNLayerSpec:
     dtype: jnp.dtype = jnp.float32
     precision: object = None
     gain: float = 1.0  # softmax inverse temperature (soft-WTA sharpness)
+    # One-dispatch training: forward + softmax + EWMA + weights in a single
+    # Pallas mega-kernel (repro.kernels.bcpnn_phase).  Requires use_kernels;
+    # composes with the quantized *state* tier but not with a reduced
+    # *datapath* (the per-stage rounding of the bf emulation cannot run
+    # inside the fused kernel).
+    fused_phase: bool = False
+
+    def __post_init__(self):
+        if self.fused_phase:
+            if not self.use_kernels:
+                raise ValueError("fused_phase=True requires use_kernels=True")
+            if _datapath_policy(self) is not None:
+                raise ValueError(
+                    "fused_phase is incompatible with a reduced-precision "
+                    "datapath (precision fmt "
+                    f"{self.precision.fmt.name!r}); only the quantized state "
+                    "tier (state_format=) composes with the fused kernel"
+                )
 
     @property
     def n_pre(self) -> int:
@@ -73,6 +91,23 @@ class BCPNNLayerSpec:
         return self.post.n_units
 
 
+def _datapath_policy(spec: "BCPNNLayerSpec"):
+    """The PrecisionPolicy if it actually reduces the *datapath* (non-identity
+    fmt) — a policy carrying only a ``state_format`` is not a datapath."""
+    p = spec.precision
+    if p is None or p.fmt.is_identity:
+        return None
+    return p
+
+
+def _state_format(spec: "BCPNNLayerSpec"):
+    """The storage format of the quantized state tier, if any."""
+    p = spec.precision
+    if p is not None and getattr(p, "has_state_tier", False):
+        return p.state_format
+    return None
+
+
 def _forward(spec: BCPNNLayerSpec, state: LayerState, x: jnp.ndarray) -> jnp.ndarray:
     """s = x @ (w o mask) + b; softmax per HCU. Kernel or reference path."""
     mask = (
@@ -80,7 +115,7 @@ def _forward(spec: BCPNNLayerSpec, state: LayerState, x: jnp.ndarray) -> jnp.nda
         if state.plast is not None
         else None
     )
-    if spec.precision is not None:
+    if _datapath_policy(spec) is not None:
         from repro.precision.policy import quantized_forward
 
         return quantized_forward(
@@ -107,8 +142,9 @@ def _learn(
     )
 
     marg, w, b = state.marginals, state.w, state.b
+    sfmt = _state_format(spec)
     for _ in range(spec.n_cycles):
-        if spec.precision is not None:
+        if _datapath_policy(spec) is not None:
             from repro.precision.policy import quantized_learning_cycle
 
             marg, w, b = quantized_learning_cycle(
@@ -118,15 +154,55 @@ def _learn(
             from repro.kernels import ops as kops
 
             marg, w, b = kops.bcpnn_update(
-                marg, ai, aj, lam=spec.lam, k_b=spec.k_b, mask=mask
+                marg, ai, aj, lam=spec.lam, k_b=spec.k_b, mask=mask,
+                state_format=sfmt, layout=spec.post,
             )
         else:
+            if sfmt is not None:
+                # Traces may be stored bf16; upcast so the EWMA runs in f32
+                # (bf16 * python-float would weak-promote to bf16 arithmetic).
+                marg = MarginalState(
+                    ci=marg.ci.astype(jnp.float32),
+                    cj=marg.cj.astype(jnp.float32),
+                    cij=marg.cij.astype(jnp.float32),
+                )
             marg, w, b = learning.learning_cycle(
                 marg, ai, aj, spec.lam, spec.k_b, mask=mask
             )
+            if sfmt is not None:
+                from repro.precision.policy import state_quantized_cycle
+
+                marg, w, b = state_quantized_cycle(
+                    marg, spec.precision, k_b=spec.k_b, mask=mask
+                )
     return LayerState(
         marginals=marg, w=w, b=b, plast=state.plast, step=state.step + 1
     )
+
+
+def _fused_train_batch(
+    spec: BCPNNLayerSpec, state: LayerState, x: jnp.ndarray
+) -> Tuple[LayerState, jnp.ndarray]:
+    """The one-dispatch training path: the whole Alg.1 batch iteration
+    (forward + HCU softmax + EWMA marginals + weight/bias epilogue) in a
+    single `bcpnn_phase` Pallas call, bit-exact with the unfused kernel
+    composition."""
+    from repro.kernels import ops as kops
+
+    mask = (
+        state.plast.unit_mask(spec.pre, spec.post)
+        if state.plast is not None
+        else None
+    )
+    marg, w, b, aj = kops.bcpnn_phase(
+        state.marginals, x, state.w, state.b, spec.post,
+        lam=spec.lam, k_b=spec.k_b, gain=spec.gain, mask=mask,
+        n_cycles=spec.n_cycles, state_format=_state_format(spec),
+    )
+    new_state = LayerState(
+        marginals=marg, w=w, b=b, plast=state.plast, step=state.step + 1
+    )
+    return new_state, aj
 
 
 class StructuralPlasticityLayer:
@@ -145,10 +221,12 @@ class StructuralPlasticityLayer:
         precision=None,
         init_jitter: float = 1.0,
         gain: float = 1.0,
+        fused_phase: bool = False,
     ):
         self.spec = BCPNNLayerSpec(
             pre=pre, post=post, lam=lam, k_b=k_b, n_cycles=n_cycles,
             use_kernels=use_kernels, precision=precision, gain=gain,
+            fused_phase=fused_phase,
         )
         self.init_jitter = init_jitter
         self.fan_in = fan_in if fan_in is not None else pre.n_hcu
@@ -181,6 +259,8 @@ class StructuralPlasticityLayer:
     def train_batch(self, state: LayerState, x: jnp.ndarray) -> Tuple[LayerState, jnp.ndarray]:
         """One Alg.1 batch iteration: (maybe) rewire, forward, learn."""
         state = self.maybe_update_mask(state)
+        if self.spec.fused_phase:
+            return _fused_train_batch(self.spec, state, x)
         aj = _forward(self.spec, state, x)
         new_state = _learn(self.spec, state, x, aj)
         return new_state, aj

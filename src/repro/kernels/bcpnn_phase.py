@@ -1,0 +1,306 @@
+"""Pallas TPU mega-kernel: one full BCPNN training phase per batch.
+
+This is the one-kernel training pipeline of the stream-based FPGA
+accelerator (arXiv 2503.01561) mapped onto the TPU memory hierarchy: the
+forward support GEMM, per-HCU softmax, batch means, EWMA marginal updates
+(c_i / c_j / C_ij) and the Bayesian weight/bias epilogue all run in a single
+grid pass, with the (F_tile, H_tile) C_ij block resident in VMEM.  Compared
+to the three-dispatch composition (`masked_matmul` -> gain -> `hcu_softmax`
+-> `bcpnn_update`) this eliminates the HBM round-trips of the support matrix
+s and the activations a_j, and fuses the optional `bf_round` state
+quantization into the epilogue instead of running it as a separate op.
+
+Grid layout: ``(H_tiles, T)`` with the phase counter ``t`` innermost and
+``T = F_tiles + 1 + F_tiles * B_chunks``.  For a fixed output tile column j:
+
+  t in [0, nf)      forward: s_acc (scratch, full padded batch resident)
+                    accumulates x_tile @ (w_tile * mask_tile) over F tiles —
+                    the exact K-chunk order of `masked_matmul`;
+  t == nf           softmax: bias add + gain, per-HCU softmax with MCU lanes
+                    padded to the same 128-wide -inf layout as `hcu_softmax`,
+                    padded batch rows zeroed; writes the a_j block (which
+                    stays resident for the update steps);
+  t > nf            update: step (i, c) = divmod(t - nf - 1, nb) processes
+                    batch chunk c of F tile i with the *same per-step
+                    expressions and block shapes* as the `bcpnn_update`
+                    kernel grid; the epilogue at c == nb-1 applies state
+                    rounding and the masked Bayes weights.
+
+Bit-exactness with the unfused kernel path requires replicating not just the
+accumulation *order* but the exact per-step expression shapes: XLA's fusion
+(FMA contraction, reduction vectorization) is context-sensitive, so a batch
+chunk folded into a static in-kernel loop does NOT produce the same bits as
+the same chunk processed as its own grid step.  Hence the update region is
+step-per-(F tile, batch chunk), mirroring `bcpnn_update`'s grid, and the H
+tile is hypercolumn-aligned in BOTH kernels (see ops.py).  λ, B, k_B, gain
+and the state mantissa width are compile-time constants.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.bf_round import rne_round
+
+EPS = 1e-8
+
+
+def hcu_block_h(n_mcu: int, h: int) -> int:
+    """Hypercolumn-aligned H tile (~128 lanes): the softmax reduction must
+    never span tile boundaries, and the unfused `bcpnn_update` must use the
+    SAME tile for the fused/unfused paths to be bit-exact."""
+    return min(h, n_mcu * max(1, 128 // n_mcu))
+
+
+def _kernel(
+    nf: int,
+    nb: int,
+    bt: int,
+    b_real: int,
+    lam: float,
+    inv_b: float,
+    k_b: float,
+    gain: float,
+    n_mcu: int,
+    mp: int,
+    has_mask: bool,
+    state_mantissa: Optional[int],
+    ai_full_ref, ai_ref, w_ref, bias_ref, cij_ref, ci_ref, cj_ref, mask_ref,
+    aj_ref, cij_out_ref, w_out_ref, ci_out_ref, cj_out_ref, bias_out_ref,
+    s_acc,
+):
+    t = pl.program_id(1)
+    one_m = 1.0 - lam
+    upd = t - (nf + 1)
+    i = upd // nb   # F tile of the update step (valid when t > nf)
+    c = upd % nb    # batch chunk of the update step (floor-mod, ditto)
+
+    # ---- forward phase (t < nf): accumulate s = x @ (w * mask) ----
+    @pl.when(t == 0)
+    def _():
+        s_acc[...] = jnp.zeros_like(s_acc)
+
+    @pl.when(t < nf)
+    def _():
+        w = w_ref[...].astype(jnp.float32)
+        if has_mask:
+            w = w * mask_ref[...].astype(jnp.float32)
+        s_acc[...] += jax.lax.dot_general(
+            ai_full_ref[...].astype(jnp.float32),
+            w,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    # ---- softmax phase (t == nf): a_j, kept resident for the update ----
+    @pl.when(t == nf)
+    def _():
+        s = s_acc[...] + bias_ref[...].astype(jnp.float32)
+        if gain != 1.0:
+            s = s * gain
+        bp, ht = s.shape
+        hcu_t = ht // n_mcu
+        x = s.reshape(bp, hcu_t, n_mcu)
+        if mp > n_mcu:  # -inf lane pad: exp(-inf)=0 keeps the sums exact
+            x = jnp.concatenate(
+                [x, jnp.full((bp, hcu_t, mp - n_mcu), -jnp.inf, jnp.float32)],
+                axis=-1,
+            )
+        m = jnp.max(x, axis=-1, keepdims=True)
+        e = jnp.exp(x - m)
+        z = jnp.sum(e, axis=-1, keepdims=True)
+        a = (e / z)[:, :, :n_mcu].reshape(bp, ht)
+        # Padded batch rows went through the softmax as garbage; zero them so
+        # they vanish from the means and the outer products below.
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bp, ht), 0)
+        aj_ref[...] = jnp.where(rows < b_real, a, 0.0)
+
+    # ---- update phase (t > nf): EWMA marginals + weight epilogue ----
+    # Per-step shapes and expressions mirror the bcpnn_update kernel exactly.
+    @pl.when(t > nf)
+    def _():
+        ai = ai_ref[...].astype(jnp.float32)            # (bt, ft)
+        aj = aj_ref[pl.ds(c * bt, bt), :]               # (bt, ht) f32
+
+        # Chunk 0: seed the accumulators with the decayed old marginals.
+        # cij/ci blocks are revisited per j (recomputed identically); the
+        # cj/bias blocks stay resident for the whole j sweep, so cj is
+        # seeded/accumulated only during F tile 0's chunk sweep.
+        @pl.when(c == 0)
+        def _():
+            cij_out_ref[...] = one_m * cij_ref[...].astype(jnp.float32)
+            ci_out_ref[...] = one_m * ci_ref[...].astype(jnp.float32)
+
+        @pl.when((c == 0) & (i == 0))
+        def _():
+            cj_out_ref[...] = one_m * cj_ref[...].astype(jnp.float32)
+
+        cij_out_ref[...] += (lam * inv_b) * jax.lax.dot_general(
+            ai, aj, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ci_out_ref[...] += lam * (jnp.sum(ai, axis=0, keepdims=True) / b_real)
+
+        @pl.when(i == 0)
+        def _():
+            cj_out_ref[...] += lam * (
+                jnp.sum(aj, axis=0, keepdims=True) / b_real
+            )
+
+        # Last chunk: (optional) state rounding + Bayes weight epilogue on
+        # the resident tiles.
+        @pl.when(c == nb - 1)
+        def _():
+            ci = ci_out_ref[...]
+            cj = cj_out_ref[...]
+            cij_new = cij_out_ref[...]
+            if state_mantissa is not None:
+                ci = rne_round(ci, state_mantissa)
+                cj = rne_round(cj, state_mantissa)  # idempotent for i > 0
+                cij_new = rne_round(cij_new, state_mantissa)
+                cij_out_ref[...] = cij_new
+                ci_out_ref[...] = ci
+
+                @pl.when(i == 0)
+                def _():
+                    cj_out_ref[...] = cj
+
+            @pl.when(i == 0)
+            def _():
+                bias_out_ref[...] = k_b * jnp.log(jnp.maximum(cj, EPS))
+
+            log_ci = jnp.log(jnp.maximum(ci, EPS)).reshape(ci.shape[1], 1)
+            log_cj = jnp.log(jnp.maximum(cj, EPS))  # (1, ht)
+            w = jnp.log(jnp.maximum(cij_new, EPS)) - log_ci - log_cj
+            if has_mask:
+                w = w * mask_ref[...].astype(jnp.float32)
+            w_out_ref[...] = w
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "lam", "k_b", "gain", "n_hcu", "n_mcu", "state_mantissa", "interpret",
+    ),
+)
+def bcpnn_phase_fused(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    cij: jnp.ndarray,
+    ci: jnp.ndarray,
+    cj: jnp.ndarray,
+    mask: Optional[jnp.ndarray],
+    lam: float,
+    k_b: float,
+    gain: float,
+    n_hcu: int,
+    n_mcu: int,
+    state_mantissa: Optional[int] = None,
+    interpret: bool = False,
+):
+    """One fused BCPNN training phase.
+
+    x (B, F), w (F, H), b (H,), cij (F, H), ci (F,), cj (H,), mask (F, H) or
+    None, with H = n_hcu * n_mcu.  Returns
+    (aj (B, H), ci', cj', cij', w', bias') — all f32; state rounding (if
+    ``state_mantissa``) is applied in the epilogue, storage-dtype casts are
+    the wrapper's (ops.py) job.
+
+    Padding: batch and F with zeros, H to whole *fake hypercolumns* (w/bias
+    zero, marginals 1.0 so the logs stay finite); fake-HCU softmax columns
+    produce uniform non-zero activations but only feed padded C_ij/w columns,
+    which are sliced off.
+    """
+    bsz, f = x.shape
+    h = n_hcu * n_mcu
+    ft = min(128, f)
+    fp = -(-f // ft) * ft
+    nf = fp // ft
+    ht = hcu_block_h(n_mcu, h)
+    hp = -(-h // ht) * ht
+    bt = min(128, bsz)
+    bp = -(-bsz // bt) * bt
+    nb = bp // bt
+    mp = max(128, -(-n_mcu // 128) * 128)  # softmax lane pad, as hcu_softmax
+
+    x_p = jnp.pad(x, ((0, bp - bsz), (0, fp - f)))
+    w_p = jnp.pad(w, ((0, fp - f), (0, hp - h)))
+    b_p = jnp.pad(b, (0, hp - h)).reshape(1, hp)
+    cij_p = jnp.pad(cij, ((0, fp - f), (0, hp - h)), constant_values=1.0)
+    ci_p = jnp.pad(ci, (0, fp - f), constant_values=1.0).reshape(1, fp)
+    cj_p = jnp.pad(cj, (0, hp - h), constant_values=1.0).reshape(1, hp)
+    has_mask = mask is not None
+    mask_p = (
+        jnp.pad(mask.astype(jnp.float32), ((0, fp - f), (0, hp - h)))
+        if has_mask
+        else jnp.ones((1, 1), jnp.float32)  # dummy operand, never read
+    )
+
+    # Phase counter t: F tiles of the forward sweep, the softmax step, then
+    # one step per (F tile, batch chunk) of the update sweep.
+    def fwd_f(t):
+        return jnp.where(t < nf, t, 0)
+
+    def upd_i(t):
+        return jnp.clip((t - nf - 1) // nb, 0, nf - 1)
+
+    def upd_c(t):
+        return jnp.where(t > nf, (t - nf - 1) % nb, 0)
+
+    def midx(t):
+        return jnp.where(t < nf, t, upd_i(t))
+
+    grid = (hp // ht, nf + 1 + nf * nb)
+    # jaxlint: allow[JL001] reason=lam/k_b/gain are in static_argnames — Python floats at trace time, not device values
+    lam_f, kb_f, gain_f = float(lam), float(k_b), float(gain)
+    kernel = functools.partial(
+        _kernel, nf, nb, bt, bsz, lam_f, 1.0 / bsz, kb_f,
+        gain_f, n_mcu, mp, has_mask, state_mantissa,
+    )
+    aj, cij_n, w_n, ci_n, cj_n, bias_n = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((bp, hp), jnp.float32),  # aj
+            jax.ShapeDtypeStruct((fp, hp), jnp.float32),  # cij'
+            jax.ShapeDtypeStruct((fp, hp), jnp.float32),  # w'
+            jax.ShapeDtypeStruct((1, fp), jnp.float32),   # ci'
+            jax.ShapeDtypeStruct((1, hp), jnp.float32),   # cj'
+            jax.ShapeDtypeStruct((1, hp), jnp.float32),   # bias'
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp, ft), lambda j, t: (0, fwd_f(t))),   # x (fwd)
+            pl.BlockSpec((bt, ft), lambda j, t: (upd_c(t), upd_i(t))),  # x (upd)
+            pl.BlockSpec((ft, ht), lambda j, t: (fwd_f(t), j)),   # w
+            pl.BlockSpec((1, ht), lambda j, t: (0, j)),           # bias
+            pl.BlockSpec((ft, ht), lambda j, t: (upd_i(t), j)),   # cij
+            pl.BlockSpec((1, ft), lambda j, t: (0, upd_i(t))),    # ci
+            pl.BlockSpec((1, ht), lambda j, t: (0, j)),           # cj
+            pl.BlockSpec((ft, ht), lambda j, t: (midx(t), j))
+            if has_mask
+            else pl.BlockSpec((1, 1), lambda j, t: (0, 0)),       # mask
+        ],
+        out_specs=(
+            pl.BlockSpec((bp, ht), lambda j, t: (0, j)),          # aj
+            pl.BlockSpec((ft, ht), lambda j, t: (upd_i(t), j)),   # cij'
+            pl.BlockSpec((ft, ht), lambda j, t: (upd_i(t), j)),   # w'
+            pl.BlockSpec((1, ft), lambda j, t: (0, upd_i(t))),    # ci'
+            pl.BlockSpec((1, ht), lambda j, t: (0, j)),           # cj'
+            pl.BlockSpec((1, ht), lambda j, t: (0, j)),           # bias'
+        ),
+        scratch_shapes=[pltpu.VMEM((bp, ht), jnp.float32)],
+        interpret=interpret,
+    )(x_p, x_p, w_p, b_p, cij_p, ci_p, cj_p, mask_p)
+    return (
+        aj[:bsz, :h],
+        ci_n[0, :f],
+        cj_n[0, :h],
+        cij_n[:f, :h],
+        w_n[:f, :h],
+        bias_n[0, :h],
+    )

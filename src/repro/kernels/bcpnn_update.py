@@ -18,70 +18,145 @@ Compared to the unfused jnp path this saves one full HBM round-trip of the
 (N_F x N_H) C_ij and w tensors per cycle — on the bcpnn_xl config that is the
 difference between memory-bound and MXU-bound (see EXPERIMENTS.md §Perf).
 
-The c_i'/c_j' vector EWMAs are O(F+H) and computed by the wrapper (ops.py);
-they enter the kernel only as epilogue operands.  λ, B, k_B are compile-time
+The c_i'/c_j' vector EWMAs and the bias also run *inside* the kernel now:
+each batch tile contributes its row-sum to the resident (1, F_tile)/(1,
+H_tile) output rows while it is in VMEM for the GEMM, so the activations are
+read from HBM exactly once for both the outer product and the means.  With
+``state_mantissa`` set (the quantized bf-state tier), the marginal traces
+are RNE-rounded in the epilogue — fused `bf_round`, not a separate op — and
+w/bias are derived from the rounded traces.  λ, B, k_B are compile-time
 constants (λ changes never inside a run).
+
+Grid layout: ``(H_tiles, 1 + F_tiles * B_chunks)`` with a phase counter t
+innermost; t == 0 is a structural no-op and step t > 0 processes
+(i, c) = divmod(t - 1, nb).  This deliberately mirrors the update region of
+the fused `bcpnn_phase` kernel statement for statement (same pl.when
+nesting, same per-step shapes, same in-branch expression order): XLA's
+fusion and FMA-contraction decisions are sensitive to cond structure and to
+which grid dimensions constant-fold away, so the two kernels only produce
+bit-identical marginals when their compiled update bodies are structurally
+identical.  The t == 0 no-op keeps the phase counter a dynamic loop variable
+even for single-tile shapes (a fully-folded (1, 1, 1) grid compiles the seed
+and epilogue inline and flips low bits).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.bf_round import rne_round
+
 EPS = 1e-8
 
 
-def _kernel(nb: int, lam: float, inv_b: float, ai_ref, aj_ref, cij_ref,
-            ci_ref, cj_ref, mask_ref, cij_out_ref, w_ref):
-    b = pl.program_id(2)
+def _kernel(
+    nf: int,
+    nb: int,
+    b_real: int,
+    lam: float,
+    inv_b: float,
+    k_b: float,
+    state_mantissa: Optional[int],
+    ai_ref, aj_ref, cij_ref, ci_ref, cj_ref, mask_ref,
+    cij_out_ref, w_ref, ci_out_ref, cj_out_ref, bias_ref,
+):
+    t = pl.program_id(1)
+    one_m = 1.0 - lam
+    upd = t - 1
+    i = upd // nb   # F tile of the update step (valid when t > 0)
+    c = upd % nb    # batch chunk of the update step (floor-mod, ditto)
 
-    # First batch step: seed the accumulator with the decayed old C_ij.
-    @pl.when(b == 0)
+    @pl.when(t > 0)
     def _():
-        cij_out_ref[...] = (1.0 - lam) * cij_ref[...].astype(jnp.float32)
+        ai = ai_ref[...].astype(jnp.float32)  # (bt, ft)
+        aj = aj_ref[...].astype(jnp.float32)  # (bt, ht)
 
-    # MXU: contraction over the (local) batch tile.
-    ai = ai_ref[...].astype(jnp.float32)  # (bt, ft)
-    aj = aj_ref[...].astype(jnp.float32)  # (bt, ht)
-    acc = jax.lax.dot_general(
-        ai, aj, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    cij_out_ref[...] += (lam * inv_b) * acc
+        # Chunk 0: seed the accumulators with the decayed old marginals.
+        # cij/ci blocks are revisited per j (recomputed identically); the
+        # cj/bias blocks stay resident for the whole j sweep, so cj is
+        # seeded/accumulated only during F tile 0's chunk sweep.
+        @pl.when(c == 0)
+        def _():
+            cij_out_ref[...] = one_m * cij_ref[...].astype(jnp.float32)
+            ci_out_ref[...] = one_m * ci_ref[...].astype(jnp.float32)
 
-    # Last batch step: Bayesian weight epilogue on the resident tile.
-    @pl.when(b == nb - 1)
-    def _():
-        cij_new = cij_out_ref[...]
-        log_ci = jnp.log(jnp.maximum(ci_ref[...], EPS))  # (ft, 1)
-        log_cj = jnp.log(jnp.maximum(cj_ref[...], EPS))  # (1, ht)
-        w = jnp.log(jnp.maximum(cij_new, EPS)) - log_ci - log_cj
-        w_ref[...] = (w * mask_ref[...].astype(jnp.float32)).astype(w_ref.dtype)
+        @pl.when((c == 0) & (i == 0))
+        def _():
+            cj_out_ref[...] = one_m * cj_ref[...].astype(jnp.float32)
+
+        # MXU: contraction over the batch chunk; VPU: batch-mean row-sums.
+        cij_out_ref[...] += (lam * inv_b) * jax.lax.dot_general(
+            ai, aj, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        ci_out_ref[...] += lam * (jnp.sum(ai, axis=0, keepdims=True) / b_real)
+
+        @pl.when(i == 0)
+        def _():
+            cj_out_ref[...] += lam * (
+                jnp.sum(aj, axis=0, keepdims=True) / b_real
+            )
+
+        # Last chunk: (optional) state rounding + Bayes weight epilogue on
+        # the resident tiles.
+        @pl.when(c == nb - 1)
+        def _():
+            ci = ci_out_ref[...]
+            cj = cj_out_ref[...]
+            cij_new = cij_out_ref[...]
+            if state_mantissa is not None:
+                ci = rne_round(ci, state_mantissa)
+                cj = rne_round(cj, state_mantissa)  # idempotent for i > 0
+                cij_new = rne_round(cij_new, state_mantissa)
+                cij_out_ref[...] = cij_new
+                ci_out_ref[...] = ci
+
+                @pl.when(i == 0)
+                def _():
+                    cj_out_ref[...] = cj
+
+            @pl.when(i == 0)
+            def _():
+                bias_ref[...] = k_b * jnp.log(jnp.maximum(cj, EPS))
+
+            log_ci = jnp.log(jnp.maximum(ci, EPS)).reshape(ci.shape[1], 1)
+            log_cj = jnp.log(jnp.maximum(cj, EPS))  # (1, ht)
+            w = jnp.log(jnp.maximum(cij_new, EPS)) - log_ci - log_cj
+            w_ref[...] = (w * mask_ref[...].astype(jnp.float32)).astype(w_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("lam", "block_b", "block_f", "block_h", "interpret"),
+    static_argnames=(
+        "lam", "k_b", "state_mantissa",
+        "block_b", "block_f", "block_h", "interpret",
+    ),
 )
-def bcpnn_update_cij_w(
+def bcpnn_update_fused(
     ai: jnp.ndarray,
     aj: jnp.ndarray,
     cij: jnp.ndarray,
-    ci_new: jnp.ndarray,
-    cj_new: jnp.ndarray,
+    ci: jnp.ndarray,
+    cj: jnp.ndarray,
     mask: jnp.ndarray,
     lam: float,
+    k_b: float = 1.0,
+    state_mantissa: Optional[int] = None,
     block_b: int = 128,
     block_f: int = 128,
     block_h: int = 128,
     interpret: bool = False,
 ):
-    """Fused C_ij EWMA + masked weight computation.
+    """Fused EWMA marginal update + masked weight/bias computation.
 
-    ai (B, F), aj (B, H), cij (F, H) f32, ci_new (F,) f32, cj_new (H,) f32,
-    mask (F, H).  Returns (cij_new f32, w f32).  Padding: batch with zeros
-    (outer-product contributions vanish), F/H to tile multiples (sliced off).
+    ai (B, F), aj (B, H), cij (F, H), ci (F,), cj (H,), mask (F, H).
+    Returns (ci', cj', cij', w, bias), all f32 — storage-dtype casts for the
+    quantized-state tier are the wrapper's (ops.py) job.  Padding: batch with
+    zeros (outer-product and row-sum contributions vanish), F/H to tile
+    multiples with marginals at 1.0 (finite logs; sliced off).
     """
     b, f = ai.shape
     h = aj.shape[1]
@@ -95,33 +170,50 @@ def bcpnn_update_cij_w(
     ai_p = jnp.pad(ai, ((0, bp - b), (0, fp - f)))
     aj_p = jnp.pad(aj, ((0, bp - b), (0, hp - h)))
     cij_p = jnp.pad(cij, ((0, fp - f), (0, hp - h)), constant_values=1.0)
-    ci_p = jnp.pad(ci_new, (0, fp - f), constant_values=1.0).reshape(fp, 1)
-    cj_p = jnp.pad(cj_new, (0, hp - h), constant_values=1.0).reshape(1, hp)
+    ci_p = jnp.pad(ci, (0, fp - f), constant_values=1.0).reshape(1, fp)
+    cj_p = jnp.pad(cj, (0, hp - h), constant_values=1.0).reshape(1, hp)
     mask_p = jnp.pad(mask.astype(jnp.float32), ((0, fp - f), (0, hp - h)))
 
     nb = bp // bt
-    grid = (fp // ft, hp // ht, nb)  # batch contraction innermost
-    # jaxlint: allow[JL001] reason=lam is in static_argnames — a Python float at trace time, not a device value
-    kernel = functools.partial(_kernel, nb, float(lam), 1.0 / b)
-    cij_new, w = pl.pallas_call(
+    nf = fp // ft
+    grid = (hp // ht, 1 + nf * nb)  # no-op step 0 + per-(F tile, chunk) steps
+
+    def upd_i(t):
+        return jnp.clip((t - 1) // nb, 0, nf - 1)
+
+    def upd_c(t):
+        return jnp.where(t > 0, (t - 1) % nb, 0)
+
+    # jaxlint: allow[JL001] reason=lam/k_b are in static_argnames — Python floats at trace time, not device values
+    lam_f, kb_f = float(lam), float(k_b)
+    kernel = functools.partial(
+        _kernel, nf, nb, b, lam_f, 1.0 / b, kb_f, state_mantissa
+    )
+    cij_n, w, ci_n, cj_n, bias = pl.pallas_call(
         kernel,
         out_shape=(
             jax.ShapeDtypeStruct((fp, hp), jnp.float32),
             jax.ShapeDtypeStruct((fp, hp), jnp.float32),
+            jax.ShapeDtypeStruct((1, fp), jnp.float32),
+            jax.ShapeDtypeStruct((1, hp), jnp.float32),
+            jax.ShapeDtypeStruct((1, hp), jnp.float32),
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bt, ft), lambda i, j, k: (k, i)),  # ai
-            pl.BlockSpec((bt, ht), lambda i, j, k: (k, j)),  # aj
-            pl.BlockSpec((ft, ht), lambda i, j, k: (i, j)),  # cij (old)
-            pl.BlockSpec((ft, 1), lambda i, j, k: (i, 0)),   # ci_new
-            pl.BlockSpec((1, ht), lambda i, j, k: (0, j)),   # cj_new
-            pl.BlockSpec((ft, ht), lambda i, j, k: (i, j)),  # mask
+            pl.BlockSpec((bt, ft), lambda j, t: (upd_c(t), upd_i(t))),  # ai
+            pl.BlockSpec((bt, ht), lambda j, t: (upd_c(t), j)),         # aj
+            pl.BlockSpec((ft, ht), lambda j, t: (upd_i(t), j)),  # cij (old)
+            pl.BlockSpec((1, ft), lambda j, t: (0, upd_i(t))),   # ci (old)
+            pl.BlockSpec((1, ht), lambda j, t: (0, j)),          # cj (old)
+            pl.BlockSpec((ft, ht), lambda j, t: (upd_i(t), j)),  # mask
         ],
         out_specs=(
-            pl.BlockSpec((ft, ht), lambda i, j, k: (i, j)),  # cij_new (acc)
-            pl.BlockSpec((ft, ht), lambda i, j, k: (i, j)),  # w
+            pl.BlockSpec((ft, ht), lambda j, t: (upd_i(t), j)),  # cij' (acc)
+            pl.BlockSpec((ft, ht), lambda j, t: (upd_i(t), j)),  # w
+            pl.BlockSpec((1, ft), lambda j, t: (0, upd_i(t))),   # ci'
+            pl.BlockSpec((1, ht), lambda j, t: (0, j)),          # cj'
+            pl.BlockSpec((1, ht), lambda j, t: (0, j)),          # bias
         ),
         interpret=interpret,
     )(ai_p, aj_p, cij_p, ci_p, cj_p, mask_p)
-    return cij_new[:f, :h], w[:f, :h]
+    return ci_n[0, :f], cj_n[0, :h], cij_n[:f, :h], w[:f, :h], bias[0, :h]

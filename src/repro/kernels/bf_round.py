@@ -16,15 +16,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(shift: int, x_ref, o_ref):
-    x = x_ref[...]
+def rne_round(x: jnp.ndarray, mantissa_bits: int) -> jnp.ndarray:
+    """Bitmask RNE mantissa truncation of f32 `x` as a plain jnp expression.
+
+    Shared by this kernel's body and by the state-quantization epilogues of
+    the fused training kernels (bcpnn_update / bcpnn_phase), so every
+    reduced-precision path rounds identically.  `mantissa_bits` is a Python
+    int (compile-time constant); non-finite values pass through.
+    """
+    shift = 23 - mantissa_bits
     u = jax.lax.bitcast_convert_type(x, jnp.uint32)
     bias = jnp.uint32((1 << (shift - 1)) - 1)
     lsb = (u >> shift) & jnp.uint32(1)
     keep = jnp.uint32(0xFFFFFFFF ^ ((1 << shift) - 1))
     rounded = (u + bias + lsb) & keep
     out = jax.lax.bitcast_convert_type(rounded, jnp.float32)
-    o_ref[...] = jnp.where(jnp.isfinite(x), out, x)
+    return jnp.where(jnp.isfinite(x), out, x)
+
+
+def _kernel(shift: int, x_ref, o_ref):
+    o_ref[...] = rne_round(x_ref[...], 23 - shift)
 
 
 @functools.partial(jax.jit, static_argnames=("mantissa_bits", "block", "interpret"))

@@ -60,6 +60,53 @@ def bcpnn_update(
     return ci_n, cj_n, cij_n, w, bias
 
 
+def bcpnn_phase(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    ci: jnp.ndarray,
+    cj: jnp.ndarray,
+    cij: jnp.ndarray,
+    lam: float,
+    n_hcu: int,
+    n_mcu: int,
+    k_b: float = 1.0,
+    gain: float = 1.0,
+    mask: Optional[jnp.ndarray] = None,
+    state_mantissa: Optional[int] = None,
+) -> Tuple[jnp.ndarray, ...]:
+    """One full BCPNN training phase (Alg.1 L8-16): forward support, per-HCU
+    softmax, then the EWMA marginal/weight update — the oracle for the fused
+    ``bcpnn_phase`` mega-kernel.
+
+    With ``state_mantissa`` set, the marginal traces are RNE-rounded to that
+    mantissa width (the quantized bf-state tier) and w/bias are re-derived
+    from the *rounded* traces, matching the kernel epilogue.
+
+    Returns (aj, ci', cj', cij', w', bias').
+    """
+    s = masked_matmul(x, w, b, mask=mask)
+    if gain != 1.0:
+        s = s * gain
+    aj = hcu_softmax(s, n_hcu, n_mcu)
+    ci_n, cj_n, cij_n, w_n, bias = bcpnn_update(
+        x, aj, ci, cj, cij, lam, k_b=k_b, mask=mask
+    )
+    if state_mantissa is not None:
+        ci_n = bf_round(ci_n, state_mantissa)
+        cj_n = bf_round(cj_n, state_mantissa)
+        cij_n = bf_round(cij_n, state_mantissa)
+        w_n = (
+            jnp.log(jnp.maximum(cij_n, EPS))
+            - jnp.log(jnp.maximum(ci_n, EPS))[:, None]
+            - jnp.log(jnp.maximum(cj_n, EPS))[None, :]
+        )
+        if mask is not None:
+            w_n = w_n * mask
+        bias = k_b * jnp.log(jnp.maximum(cj_n, EPS))
+    return aj, ci_n, cj_n, cij_n, w_n, bias
+
+
 def masked_matmul(
     x: jnp.ndarray,
     w: jnp.ndarray,

@@ -54,6 +54,23 @@ def get_format(name: str) -> BFFormat:
         ) from None
 
 
+def state_spec(fmt):
+    """(mantissa_bits, storage_dtype) for keeping persistent state in `fmt`.
+
+    The quantized-state tier (``PrecisionPolicy.state_format``) rounds the
+    MarginalState traces / decode caches to ``mantissa_bits`` (RNE, fused
+    into the kernel epilogues) and stores them in ``storage_dtype``:
+    ``jnp.bfloat16`` when the rounded values are exactly representable there
+    (mantissa <= 7, i.e. bf14/bf15/bf16 — halves the state's HBM footprint),
+    otherwise ``None`` meaning f32 storage with the low mantissa bits zeroed
+    (bf20/bf24/bf28 emulation).  Identity formats return ``(None, None)``.
+    """
+    if fmt is None or fmt.is_identity:
+        return None, None
+    mant = fmt.mantissa_bits
+    return mant, (jnp.bfloat16 if mant <= 7 else None)
+
+
 def round_to(x: jnp.ndarray, fmt: BFFormat, use_kernel: bool = True) -> jnp.ndarray:
     """Round f32 array to the format's mantissa width (RNE)."""
     if fmt.is_identity:

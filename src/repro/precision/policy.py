@@ -27,22 +27,59 @@ import jax.numpy as jnp
 
 from repro.core.learning import EPS, MarginalState
 from repro.core.units import UnitLayout
-from repro.precision.formats import BFFormat, get_format, round_to
+from repro.precision.formats import BFFormat, get_format, round_to, state_spec
 
 
 @dataclasses.dataclass(frozen=True)
 class PrecisionPolicy:
-    """Which format each datapath stage runs in (uniform by default)."""
+    """Which format each datapath stage runs in (uniform by default).
+
+    ``fmt`` is the *datapath* format (every algebraic stage rounds to it);
+    ``state_format`` is the orthogonal *storage* tier: MarginalState traces
+    (and decode caches) are kept rounded to that format between batches —
+    bf16 stores them in actual ``jnp.bfloat16`` (half the HBM footprint,
+    the olmax bf16-optimizer-EMA pattern), wider customs (bf20..) keep f32
+    storage with the low mantissa bits zeroed.  Arithmetic always happens in
+    f32; rounding is fused into the kernel epilogues on the kernel paths.
+    A policy with an identity ``fmt`` and a ``state_format`` set gives the
+    pure quantized-state tier (full-precision datapath, compressed state).
+    """
 
     fmt: BFFormat
     use_kernel: bool = True
+    state_format: Optional[BFFormat] = None
 
     @classmethod
-    def named(cls, name: str, use_kernel: bool = True) -> "PrecisionPolicy":
-        return cls(fmt=get_format(name), use_kernel=use_kernel)
+    def named(
+        cls,
+        name: str,
+        use_kernel: bool = True,
+        state_format=None,
+    ) -> "PrecisionPolicy":
+        if isinstance(state_format, str):
+            state_format = get_format(state_format)
+        return cls(
+            fmt=get_format(name), use_kernel=use_kernel,
+            state_format=state_format,
+        )
 
     def q(self, x: jnp.ndarray) -> jnp.ndarray:
         return round_to(x, self.fmt, use_kernel=self.use_kernel)
+
+    @property
+    def has_state_tier(self) -> bool:
+        return self.state_format is not None and not self.state_format.is_identity
+
+    def q_state(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Round + cast one array into the state storage tier (identity when
+        no state_format is set)."""
+        mant, dtype = state_spec(self.state_format)
+        if mant is None:
+            return x
+        y = round_to(
+            x.astype(jnp.float32), self.state_format, use_kernel=self.use_kernel
+        )
+        return y.astype(dtype) if dtype is not None else y
 
 
 def quantized_forward(
@@ -82,9 +119,11 @@ def quantized_learning_cycle(
         / b_sz
     )
     one_m = 1.0 - lam
-    ci = policy.q(one_m * state.ci + lam * mi)
-    cj = policy.q(one_m * state.cj + lam * mj)
-    cij = policy.q(one_m * state.cij + lam * mij)
+    # Traces may live in the state storage tier (bf16): upcast so the EWMA
+    # arithmetic runs in f32 regardless of storage dtype.
+    ci = policy.q(one_m * state.ci.astype(jnp.float32) + lam * mi)
+    cj = policy.q(one_m * state.cj.astype(jnp.float32) + lam * mj)
+    cij = policy.q(one_m * state.cij.astype(jnp.float32) + lam * mij)
     new_state = MarginalState(ci=ci, cj=cj, cij=cij)
     w = policy.q(
         jnp.log(jnp.maximum(cij, EPS))
@@ -94,4 +133,65 @@ def quantized_learning_cycle(
     if mask is not None:
         w = w * mask
     bias = policy.q(k_b * jnp.log(jnp.maximum(cj, EPS)))
+    if policy.has_state_tier:
+        new_state, w, bias = state_quantized_cycle(
+            new_state, policy, k_b=k_b, mask=mask
+        )
+        w = policy.q(w)
+        bias = policy.q(bias)
     return new_state, w, bias
+
+
+def state_quantized_cycle(
+    state: MarginalState,
+    policy: PrecisionPolicy,
+    k_b: float = 1.0,
+    mask: Optional[jnp.ndarray] = None,
+) -> Tuple[MarginalState, jnp.ndarray, jnp.ndarray]:
+    """Round a freshly-updated MarginalState into the policy's state tier and
+    re-derive w/bias from the *rounded* traces — the jnp mirror of the fused
+    kernels' state-quantization epilogue.  Identity when no state tier."""
+    if not policy.has_state_tier:
+        w, bias = _weights_from(state, k_b, mask)
+        return state, w, bias
+    fmt = policy.state_format
+
+    def rq(t):
+        return round_to(t.astype(jnp.float32), fmt, use_kernel=policy.use_kernel)
+
+    ci, cj, cij = rq(state.ci), rq(state.cj), rq(state.cij)
+    w, bias = _weights_from(MarginalState(ci=ci, cj=cj, cij=cij), k_b, mask)
+    _, dtype = state_spec(fmt)
+    if dtype is not None:
+        ci, cj, cij = ci.astype(dtype), cj.astype(dtype), cij.astype(dtype)
+    return MarginalState(ci=ci, cj=cj, cij=cij), w, bias
+
+
+def _weights_from(
+    state: MarginalState, k_b: float, mask: Optional[jnp.ndarray]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    ci = state.ci.astype(jnp.float32)
+    cj = state.cj.astype(jnp.float32)
+    cij = state.cij.astype(jnp.float32)
+    w = (
+        jnp.log(jnp.maximum(cij, EPS))
+        - jnp.log(jnp.maximum(ci, EPS))[:, None]
+        - jnp.log(jnp.maximum(cj, EPS))[None, :]
+    )
+    if mask is not None:
+        w = w * mask
+    bias = k_b * jnp.log(jnp.maximum(cj, EPS))
+    return w, bias
+
+
+def quantize_marginals(state: MarginalState, policy) -> MarginalState:
+    """Cast a MarginalState into the policy's state storage tier (round +
+    dtype cast) — used at compile time so jitted epoch scan carries start in
+    the storage dtype and stay type-stable across batches."""
+    if policy is None or not getattr(policy, "has_state_tier", False):
+        return state
+    return MarginalState(
+        ci=policy.q_state(state.ci),
+        cj=policy.q_state(state.cj),
+        cij=policy.q_state(state.cij),
+    )

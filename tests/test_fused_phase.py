@@ -1,0 +1,229 @@
+"""Fused one-kernel BCPNN phase: bit-parity, dispatch counts, bf-state tier.
+
+The contract under test (ISSUE 9): ``bcpnn_phase`` — forward + HCU softmax +
+EWMA marginals + weight/bias epilogue in ONE Pallas dispatch — is *bitwise*
+identical to the unfused kernel composition (``masked_matmul`` ->
+``hcu_softmax`` -> ``bcpnn_update``) in interpret mode, across tile-divisible
+and non-divisible shapes, with and without the quantized bf-state tier.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DenseLayer,
+    Network,
+    StructuralPlasticityLayer,
+    UnitLayout,
+)
+from repro.core.compiled import ExecutionConfig
+from repro.core.learning import MarginalState
+from repro.kernels import ops, ref
+from repro.precision import PrecisionPolicy
+
+RNG = np.random.default_rng(7)
+
+# (B, F, n_hcu, n_mcu): tile-aligned, everything-prime, H-tile-splitting
+# (n_mcu > 128 lanes), multi-tile on every axis, and batch > one chunk.
+SHAPES = [
+    (32, 64, 4, 16),
+    (13, 17, 3, 7),
+    (64, 200, 2, 129),
+    (130, 300, 20, 16),
+    (257, 140, 2, 70),
+]
+
+
+def _problem(B, F, n_hcu, n_mcu, use_mask=True):
+    H = n_hcu * n_mcu
+    x = jnp.asarray(RNG.random((B, F)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((F, H)) * 0.1, jnp.float32)
+    b = jnp.asarray(RNG.standard_normal(H) * 0.1, jnp.float32)
+    marg = MarginalState(
+        ci=jnp.asarray(RNG.random(F) * 0.5 + 0.25, jnp.float32),
+        cj=jnp.asarray(RNG.random(H) * 0.5 + 0.25, jnp.float32),
+        cij=jnp.asarray(RNG.random((F, H)) * 0.25 + 0.1, jnp.float32),
+    )
+    mask = (
+        jnp.asarray(RNG.random((F, H)) > 0.3, jnp.float32) if use_mask else None
+    )
+    return x, w, b, marg, mask, UnitLayout(n_hcu=n_hcu, n_mcu=n_mcu)
+
+
+def _unfused(x, w, b, marg, mask, layout, lam, k_b, gain, state_format=None):
+    """The exact unfused composition layers.py runs (layout passed through
+    for the shared hypercolumn-aligned H tiling)."""
+    s = ops.masked_matmul(x, w, b, mask=mask)
+    if gain != 1.0:
+        s = s * gain
+    aj = ops.hcu_softmax(s, layout.n_hcu, layout.n_mcu)
+    st, w_n, b_n = ops.bcpnn_update(
+        marg, x, aj, lam, k_b=k_b, mask=mask, state_format=state_format,
+        layout=layout,
+    )
+    return st, w_n, b_n, aj
+
+
+class TestFusedBitParity:
+    @pytest.mark.parametrize("B,F,n_hcu,n_mcu", SHAPES)
+    def test_bitwise_vs_unfused(self, B, F, n_hcu, n_mcu):
+        x, w, b, marg, mask, layout = _problem(B, F, n_hcu, n_mcu)
+        lam, k_b, gain = 0.01, 0.9, 1.3
+        st_f, w_f, b_f, aj_f = ops.bcpnn_phase(
+            marg, x, w, b, layout, lam, k_b=k_b, gain=gain, mask=mask
+        )
+        st_u, w_u, b_u, aj_u = _unfused(
+            x, w, b, marg, mask, layout, lam, k_b, gain
+        )
+        for name, got, want in [
+            ("aj", aj_f, aj_u), ("ci", st_f.ci, st_u.ci),
+            ("cj", st_f.cj, st_u.cj), ("cij", st_f.cij, st_u.cij),
+            ("w", w_f, w_u), ("bias", b_f, b_u),
+        ]:
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(want),
+                err_msg=f"{name} not bit-exact fused vs unfused",
+            )
+
+    def test_bitwise_no_mask(self):
+        x, w, b, marg, mask, layout = _problem(13, 17, 3, 7, use_mask=False)
+        st_f, w_f, b_f, aj_f = ops.bcpnn_phase(
+            marg, x, w, b, layout, 0.05, k_b=1.0, gain=1.0, mask=None
+        )
+        st_u, w_u, b_u, aj_u = _unfused(
+            x, w, b, marg, None, layout, 0.05, 1.0, 1.0
+        )
+        np.testing.assert_array_equal(np.asarray(w_f), np.asarray(w_u))
+        np.testing.assert_array_equal(np.asarray(aj_f), np.asarray(aj_u))
+        np.testing.assert_array_equal(np.asarray(st_f.cij), np.asarray(st_u.cij))
+
+    @pytest.mark.parametrize("B,F,n_hcu,n_mcu", SHAPES[:3])
+    def test_matches_ref(self, B, F, n_hcu, n_mcu):
+        x, w, b, marg, mask, layout = _problem(B, F, n_hcu, n_mcu)
+        lam, k_b, gain = 0.01, 0.9, 1.3
+        st_f, w_f, b_f, aj_f = ops.bcpnn_phase(
+            marg, x, w, b, layout, lam, k_b=k_b, gain=gain, mask=mask
+        )
+        aj_r, ci_r, cj_r, cij_r, w_r, b_r = ref.bcpnn_phase(
+            x, w, b, marg.ci, marg.cj, marg.cij, lam, n_hcu, n_mcu,
+            k_b=k_b, gain=gain, mask=mask,
+        )
+        np.testing.assert_allclose(np.asarray(aj_f), np.asarray(aj_r), rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st_f.cij), np.asarray(cij_r), rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_r), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(b_f), np.asarray(b_r), rtol=1e-4, atol=1e-5)
+
+    def test_bf16_state_bitwise_vs_unfused(self):
+        """The quantized-state epilogue must also be fused/unfused bit-exact,
+        and both must return the storage dtype."""
+        x, w, b, marg, mask, layout = _problem(13, 17, 3, 7)
+        st_f, w_f, b_f, _ = ops.bcpnn_phase(
+            marg, x, w, b, layout, 0.02, k_b=0.8, gain=1.1, mask=mask,
+            state_format="bf16",
+        )
+        st_u, w_u, b_u, _ = _unfused(
+            x, w, b, marg, mask, layout, 0.02, 0.8, 1.1, state_format="bf16"
+        )
+        assert st_f.cij.dtype == jnp.bfloat16
+        assert st_u.cij.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(st_f.cij.astype(jnp.float32)),
+            np.asarray(st_u.cij.astype(jnp.float32)),
+        )
+        np.testing.assert_array_equal(np.asarray(w_f), np.asarray(w_u))
+        np.testing.assert_array_equal(np.asarray(b_f), np.asarray(b_u))
+
+
+def _build():
+    net = Network(seed=0)
+    net.add(
+        StructuralPlasticityLayer(
+            UnitLayout(12, 2), UnitLayout(5, 6), fan_in=8, lam=0.05
+        )
+    )
+    net.add(DenseLayer(UnitLayout(5, 6), UnitLayout(1, 3), lam=0.05))
+    return net
+
+
+_X = RNG.random((96, 24)).astype(np.float32)
+_Y = RNG.integers(0, 3, 96)
+
+
+class TestFusedFit:
+    @pytest.mark.parametrize("engine", ["scan", "batch"])
+    def test_whole_fit_bitwise_parity(self, engine):
+        """fused_phase=True vs False through CompiledNetwork.fit: learned
+        state and predictions must be bit-identical."""
+        outs = {}
+        for fused in (False, True):
+            c = _build().compile(
+                ExecutionConfig(
+                    engine=engine, use_kernels=True, fused_phase=fused
+                )
+            )
+            c.fit((_X, _Y), epochs_hidden=2, epochs_readout=2, batch_size=32,
+                  shuffle=False)
+            outs[fused] = (
+                np.asarray(c.state.layers[0].w),
+                np.asarray(c.state.layers[0].marginals.cij),
+                np.asarray(c.predict(_X)),
+            )
+        for name, a, b in zip(("w", "cij", "scores"), outs[False], outs[True]):
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"{engine}: {name} diverged fused vs unfused"
+            )
+
+    def test_single_dispatch(self):
+        """The fused hidden train step lowers exactly ONE pallas_call; the
+        unfused kernel path needs three."""
+        c = _build().compile(ExecutionConfig(fused_phase=True))
+        lyr, st = c.hidden_layers[0], c.state.layers[0]
+        xb = jnp.asarray(_X[:32])
+        assert ops.count_pallas_calls(lyr.train_batch, st, xb) == 1
+        c0 = _build().compile(ExecutionConfig(use_kernels=True))
+        l0 = c0.hidden_layers[0]
+        assert ops.count_pallas_calls(
+            l0.train_batch, c0.state.layers[0], xb
+        ) == 3
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="use_kernels"):
+            ExecutionConfig(fused_phase=True, use_kernels=False)
+        with pytest.raises(ValueError, match="datapath"):
+            ExecutionConfig(fused_phase=True, precision="bf20")
+        # fused_phase auto-enables the kernels.
+        assert ExecutionConfig(fused_phase=True).use_kernels is True
+        # Spec-level guard (direct layer construction).
+        from repro.core.layers import BCPNNLayerSpec
+
+        with pytest.raises(ValueError, match="use_kernels"):
+            BCPNNLayerSpec(
+                pre=UnitLayout(2, 2), post=UnitLayout(2, 2), fused_phase=True
+            )
+
+
+class TestQuantizedStateTier:
+    POLICY = PrecisionPolicy.named("fp32", state_format="bf16")
+
+    def test_compile_casts_and_fit_keeps_bf16(self):
+        c = _build().compile(
+            ExecutionConfig(fused_phase=True, precision=self.POLICY)
+        )
+        assert c.state.layers[0].marginals.ci.dtype == jnp.bfloat16
+        c.fit((_X, _Y), epochs_hidden=1, epochs_readout=1, batch_size=32,
+              shuffle=False)
+        assert c.state.layers[0].marginals.cij.dtype == jnp.bfloat16
+        # Weights stay full precision (derived, not stored state).
+        assert c.state.layers[0].w.dtype == jnp.float32
+
+    def test_save_load_roundtrip(self, tmp_path):
+        cfg = ExecutionConfig(fused_phase=True, precision=self.POLICY)
+        c = _build().compile(cfg)
+        c.fit((_X, _Y), epochs_hidden=1, epochs_readout=1, batch_size=32,
+              shuffle=False)
+        before = np.asarray(c.predict(_X))
+        path = c.save(str(tmp_path))
+        c2 = _build().compile(cfg)
+        c2.load(path)
+        assert c2.state.layers[0].marginals.cij.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(before, np.asarray(c2.predict(_X)))
