@@ -88,6 +88,8 @@ DEFAULT_HOT_MODULES: Tuple[str, ...] = (
     "repro/runtime/engine.py",
     "repro/runtime/router.py",
     "repro/runtime/continual.py",
+    "repro/runtime/trace.py",
+    "repro/runtime/export.py",
     "repro/runtime/plans.py",
     "repro/runtime/epoch_engine.py",
     "repro/runtime/program.py",

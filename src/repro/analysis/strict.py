@@ -98,6 +98,10 @@ class RecompileSentinel:
     def __init__(self) -> None:
         # name -> (id(fn), fn, baseline cache size or None until warm)
         self._watched: Dict[str, Tuple[int, Any, Optional[int]]] = {}
+        # Observability hook: called with the adopted sizes() after every
+        # intentional rebaseline.  Stays None unless a tracing-enabled plan
+        # binds it (this module must not import the trace module).
+        self.on_rebaseline: Optional[Callable[[Dict[str, int]], None]] = None
 
     def watch(self, name: str, fn: Any) -> None:
         if fn is None or not hasattr(fn, "_cache_size"):
@@ -141,6 +145,8 @@ class RecompileSentinel:
         for name, (fid, fn, _b) in list(self._watched.items()):
             size = fn._cache_size()
             self._watched[name] = (fid, fn, size if size >= 1 else None)
+        if self.on_rebaseline is not None:
+            self.on_rebaseline(self.sizes())
 
 
 # ------------------------------------------------------------ finite guard

@@ -41,6 +41,7 @@ parity is asserted in tests/test_compile_api.py.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from copy import copy as _shallow_copy
@@ -148,6 +149,15 @@ class ExecutionConfig:
                  and checkify finite-value guards run on the BCPNN state
                  after every epoch.  Guards sit at phase entry/exit only, so
                  steady-state throughput is unchanged.
+    trace:       optional repro.runtime.trace.TraceConfig — the compiled
+                 network owns a Tracer and the phase programs record
+                 ``train.<phase>`` spans (host vs device-wait attribution)
+                 on the shared training trace id.  None (default) keeps
+                 every span site a dead ``is not None`` check.
+    profile_dir: when set, ``fit()`` runs its whole phase program under
+                 ``jax.profiler.trace(profile_dir)`` — a device-level
+                 profile (TensorBoard/Perfetto) complementing the
+                 host-side phase spans.
     """
 
     engine: str = "scan"
@@ -159,8 +169,17 @@ class ExecutionConfig:
     cache_activations: bool = True
     activation_budget_mb: float = 512.0
     strict: bool = False
+    trace: Any = None
+    profile_dir: Optional[str] = None
 
     def __post_init__(self):
+        if self.trace is not None:
+            from repro.runtime.trace import TraceConfig
+
+            if not isinstance(self.trace, TraceConfig):
+                raise TypeError(
+                    f"trace must be a TraceConfig, got {type(self.trace).__name__}"
+                )
         # Validate against the plan registry — the single source of truth —
         # so registering a new ExecutionPlan automatically extends configs.
         if self.engine not in PLANS:
@@ -282,6 +301,11 @@ class CompiledNetwork:
 
             self._sentinel = RecompileSentinel()
             self._finite_check = finite_checker()
+        # Training-side tracing (repro.runtime.trace): the phase programs
+        # read this and record train.* spans; None keeps them zero-cost.
+        from repro.runtime.trace import build_tracer
+
+        self.tracer = build_tracer(self.config.trace)
 
     # ------------------------------------------------------------ structure
     @property
@@ -392,10 +416,16 @@ class CompiledNetwork:
 
         t0 = time.perf_counter()
         history: List[dict] = []
-        self._run(
-            dataset, epochs_hidden, epochs_readout, batch_size, readout,
-            readout_lr, shuffle, verbose, history, reset_readout=True,
+        profile = (
+            jax.profiler.trace(self.config.profile_dir)
+            if self.config.profile_dir is not None
+            else contextlib.nullcontext()
         )
+        with profile:
+            self._run(
+                dataset, epochs_hidden, epochs_readout, batch_size, readout,
+                readout_lr, shuffle, verbose, history, reset_readout=True,
+            )
         self._strict_check("fit")
         return FitResult(
             epochs_hidden=epochs_hidden,

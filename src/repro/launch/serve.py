@@ -24,10 +24,21 @@ into the shared base every ``--merge-every`` micro-batches, and a
 with snapshot/rollback (an injected mid-stream label flip exercises the
 whole safety loop).  The telemetry line gains the online counters
 (updates / shed / merges / rollbacks / drift events).
+
+Observability (every mode): ``--metrics-port N`` serves the live
+telemetry as OpenMetrics text on ``http://127.0.0.1:N/metrics`` (0 picks
+an ephemeral port; the launcher self-scrapes and validates the
+exposition before exiting), ``--metrics-dump FILE`` writes the final
+exposition for offline scraping, ``--metrics-json`` prints the raw
+snapshot as JSON.  ``--trace-json FILE`` enables per-request tracing and
+writes the Chrome ``trace_event`` dump (open in Perfetto or
+``chrome://tracing``); ``--journal FILE`` streams typed operational
+events (restarts, drift, merges, sheds) as JSONL.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -44,6 +55,80 @@ from repro.runtime import (
     serve_fleet,
     serve_model,
 )
+
+
+def trace_config(args):
+    """A TraceConfig when any tracing flag asks for one, else None (every
+    span site stays a dead check)."""
+    if args.trace_json is None and args.journal is None:
+        return None
+    from repro.runtime import TraceConfig
+
+    return TraceConfig(journal_path=args.journal)
+
+
+def maybe_metrics_server(args, collect, tracer):
+    """Start the stdlib OpenMetrics endpoint when ``--metrics-port`` was
+    given (0 = ephemeral port)."""
+    if args.metrics_port is None:
+        return None
+    from repro.runtime import MetricsServer
+
+    server = MetricsServer(collect, tracer=tracer, port=args.metrics_port)
+    print(f"[metrics] serving OpenMetrics at {server.url}/metrics")
+    return server
+
+
+def finish_observability(args, collect, tracer, server, expect_tids=()):
+    """End-of-run observability: self-scrape + validate the /metrics
+    endpoint (or render directly), honor the dump/json flags, write the
+    Chrome trace — asserting every submitted request's trace id made it
+    into the dump — and shut the server down."""
+    from repro.runtime import parse_openmetrics, render_openmetrics
+
+    if server is not None:
+        from urllib.request import urlopen
+
+        with urlopen(f"{server.url}/metrics", timeout=10) as resp:
+            text = resp.read().decode("utf-8")
+        source = f"scraped {server.url}/metrics"
+    else:
+        text = render_openmetrics(collect())
+        source = "rendered exposition"
+    families = parse_openmetrics(text)
+    samples = sum(len(f["samples"]) for f in families.values())
+    print(
+        f"[metrics] {source}: {len(families)} families, {samples} samples "
+        "(valid OpenMetrics)"
+    )
+    if args.metrics_dump is not None:
+        with open(args.metrics_dump, "w", encoding="utf-8") as f:
+            f.write(text)
+        print(f"[metrics] wrote exposition to {args.metrics_dump}")
+    if args.metrics_json:
+        print(json.dumps(collect(), indent=2, sort_keys=True, default=str))
+    if tracer is not None and args.trace_json is not None:
+        trace = tracer.chrome_trace()
+        got = {
+            e["args"]["trace_id"]
+            for e in trace["traceEvents"]
+            if e.get("ph") == "X" and "trace_id" in e.get("args", {})
+        }
+        missing = sorted(t for t in expect_tids if t not in got)
+        if missing:
+            raise SystemExit(
+                f"[trace] submitted trace ids missing from dump: {missing}"
+            )
+        with open(args.trace_json, "w", encoding="utf-8") as f:
+            json.dump(trace, f)
+        print(
+            f"[trace] wrote {len(trace['traceEvents'])} events covering "
+            f"{len(got)} trace ids to {args.trace_json}"
+        )
+    if tracer is not None:
+        tracer.close()
+    if server is not None:
+        server.close()
 
 
 def parse_tenants(spec):
@@ -137,6 +222,29 @@ def main():
         help="strict verification: transfer guard on fused dispatches plus "
              "a recompile sentinel over prefill/decode traces",
     )
+    ap.add_argument(
+        "--metrics-port", type=int, default=None,
+        help="serve /metrics (OpenMetrics), /metrics.json and /trace.json "
+             "on this port while requests run (0 = ephemeral port); the "
+             "launcher self-scrapes and validates the exposition on exit",
+    )
+    ap.add_argument(
+        "--metrics-dump", default=None,
+        help="write the final OpenMetrics exposition to this file",
+    )
+    ap.add_argument(
+        "--metrics-json", action="store_true",
+        help="print the final telemetry snapshot as JSON",
+    )
+    ap.add_argument(
+        "--trace-json", default=None,
+        help="enable per-request tracing and write the Chrome trace_event "
+             "dump here (open in Perfetto / chrome://tracing)",
+    )
+    ap.add_argument(
+        "--journal", default=None,
+        help="JSONL sink for typed operational events (implies tracing)",
+    )
     ap.set_defaults(smoke=True)
     args = ap.parse_args()
 
@@ -161,7 +269,11 @@ def main():
             max_queue=args.max_queue,
             async_mode=args.async_mode,
             strict=args.strict,
+            trace=trace_config(args),
         ),
+    )
+    server = maybe_metrics_server(
+        args, lambda: service.stats["telemetry"], service.tracer
     )
     rng = np.random.default_rng(0)
     reqs = [
@@ -172,10 +284,15 @@ def main():
         )
         for i in range(args.requests)
     ]
+    expect_tids = []
     t0 = time.perf_counter()
     if args.async_mode:
         futures = [service.submit(r) for r in reqs]
         done = [f.result() for f in futures]
+        expect_tids = [
+            t for t in (getattr(f, "trace_id", None) for f in futures)
+            if t is not None
+        ]
         service.drain_and_stop()
     else:
         for r in reqs:
@@ -196,6 +313,10 @@ def main():
             st["telemetry"], "queue_wait_s", "prefill_s", "decode_step_s",
             "e2e_s",
         )
+    )
+    finish_observability(
+        args, lambda: service.stats["telemetry"], service.tracer, server,
+        expect_tids=expect_tids,
     )
 
 
@@ -235,6 +356,7 @@ def serve_online(args):
         ServiceConfig(
             async_mode=True,
             strict=args.strict,
+            trace=trace_config(args),
             continual=ContinualConfig(
                 update_batch=4,
                 merge_every=args.merge_every,
@@ -244,6 +366,9 @@ def serve_online(args):
                 merge_strategy="replace",
             ),
         )
+    )
+    server = maybe_metrics_server(
+        args, lambda: service.stats["telemetry"], service.tracer
     )
     rng = np.random.default_rng(1)
     idx = rng.integers(0, xs.shape[0], args.feedback)
@@ -261,6 +386,10 @@ def serve_online(args):
         if k % 3 == 0:
             futures.append(service.submit(xs[i]))  # interleaved inference
     acks = [f.result() for f in futures]
+    expect_tids = [
+        t for t in (getattr(f, "trace_id", None) for f in futures)
+        if t is not None
+    ]
     service.drain_and_stop()
     dt = time.perf_counter() - t0
     learned = [a for a in acks if isinstance(a, dict)]
@@ -277,6 +406,10 @@ def serve_online(args):
         "[telemetry] "
         + format_latency_line(snap, "queue_wait_s", "update_s", "e2e_s")
     )
+    finish_observability(
+        args, lambda: service.stats["telemetry"], service.tracer, server,
+        expect_tids=expect_tids,
+    )
 
 
 def serve_via_router(model, params, cfg, args):
@@ -292,9 +425,13 @@ def serve_via_router(model, params, cfg, args):
             buckets=tuple(args.buckets) if args.buckets else None,
             max_queue=args.max_queue,
             strict=args.strict,
+            trace=trace_config(args),
             router=RouterConfig(tenants=tenants, routing=args.routing),
         ),
         fleet=args.fleet,
+    )
+    server = maybe_metrics_server(
+        args, router.metrics.snapshot, router.tracer
     )
     rng = np.random.default_rng(0)
     names = list(tenants)
@@ -310,6 +447,10 @@ def serve_via_router(model, params, cfg, args):
             deadline_s=args.deadline_s,
         )
         for i in range(args.requests)
+    ]
+    expect_tids = [
+        t for t in (getattr(f, "trace_id", None) for f in futures)
+        if t is not None
     ]
     done, shed = [], 0
     for f in futures:
@@ -339,6 +480,15 @@ def serve_via_router(model, params, cfg, args):
     for name, eng in snap["engines"].items():
         print(f"[engine {name}] " + format_latency_line(
             eng, "queue_wait_s", "e2e_s"))
+    print(
+        "[fleet] " + format_latency_line(
+            snap["fleet"], "queue_wait_s", "e2e_s"
+        )
+    )
+    finish_observability(
+        args, router.metrics.snapshot, router.tracer, server,
+        expect_tids=expect_tids,
+    )
 
 
 if __name__ == "__main__":

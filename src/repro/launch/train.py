@@ -36,6 +36,11 @@ def main():
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--mesh", choices=("none", "host", "pod"), default="none")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument(
+        "--profile-dir", default=None,
+        help="run the train loop under jax.profiler.trace(DIR) — a "
+             "device-level profile viewable in TensorBoard/Perfetto",
+    )
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -84,10 +89,18 @@ def main():
             )
         return batch
 
-    res = train_loop(
-        step_fn, params, opt_state, batch_fn,
-        TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir),
+    import contextlib
+
+    profile = (
+        jax.profiler.trace(args.profile_dir)
+        if args.profile_dir is not None
+        else contextlib.nullcontext()
     )
+    with profile:
+        res = train_loop(
+            step_fn, params, opt_state, batch_fn,
+            TrainLoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir),
+        )
     losses = [m["loss"] for m in res.metrics]
     print(
         f"[train] done: loss {losses[0]:.3f} -> {losses[-1]:.3f}, "

@@ -66,6 +66,25 @@ from repro.runtime.service import (
     serve_model,
 )
 from repro.runtime.serve_loop import ServeSession
+from repro.runtime.trace import (
+    DeadlineShed,
+    EngineRestart,
+    EventJournal,
+    MergeApplied,
+    RecompileRebaseline,
+    RollbackApplied,
+    SpanRecord,
+    TenantShed,
+    TraceConfig,
+    Tracer,
+    build_tracer,
+)
+from repro.runtime.export import (
+    MetricsServer,
+    OpenMetricsError,
+    parse_openmetrics,
+    render_openmetrics,
+)
 from repro.runtime.train_loop import TrainLoopConfig, TrainLoopResult, train_loop
 
 # The continual tier imports repro.core.compiled (NetworkState,
@@ -105,4 +124,12 @@ __all__ = [
     "InferenceService", "Request", "ServePlan", "ServiceConfig",
     "StreamingPlan", "pad_cache_like", "serve_model", "serve_fleet",
     "ServeSession",
+    # Observability (repro.runtime.trace / repro.runtime.export).  The
+    # trace module's DriftDetected *event* is deliberately not re-exported:
+    # the continual tier's exception keeps that name here.
+    "TraceConfig", "Tracer", "build_tracer", "SpanRecord", "EventJournal",
+    "EngineRestart", "MergeApplied", "RollbackApplied",
+    "RecompileRebaseline", "DeadlineShed", "TenantShed",
+    "MetricsServer", "OpenMetricsError", "parse_openmetrics",
+    "render_openmetrics",
 ]

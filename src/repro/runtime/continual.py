@@ -72,6 +72,8 @@ from repro.runtime.epoch_engine import forward_stack
 from repro.runtime.metrics import ServiceMetrics
 from repro.runtime.program import check_finite
 from repro.runtime.service import SERVE_PLANS, BatchedPlan, ServiceConfig
+from repro.runtime.trace import DriftDetected as DriftDetectedEvent
+from repro.runtime.trace import MergeApplied, RollbackApplied
 
 
 # ------------------------------------------------------------------ errors
@@ -167,6 +169,9 @@ class Feedback:
     x: Any  # (features,) input row
     y: int  # class label
     tenant: str = "default"
+    # Fabric trace id, stamped by the Router/engine front door when tracing
+    # is on; correlates this sample's learn/merge spans and journal events.
+    trace_id: Optional[int] = None
 
 
 # -------------------------------------------------------- merge strategies
@@ -313,12 +318,13 @@ class ContinualPlan(BatchedPlan):
         if x.ndim != 1:
             raise ValueError(f"Feedback.x must be one row, got shape {x.shape}")
         ad = self._adapter(fb.tenant)
+        tid = fb.trace_id
         correct, confidence = self._observe(ad, x, int(fb.y))
         # The safety loop runs on the PRE-merge window, before this sample
         # can trigger an update or merge: a merge resets the window, so
         # baseline freezing and candidate confirm/rollback must happen
         # while the window still measures the state that produced it.
-        rolled_back = self._drift_step()
+        rolled_back = self._drift_step(tenant=fb.tenant, trace_id=tid)
         ad.buf_x.append(x)
         ad.buf_y.append(int(fb.y))
         applied = shed = False
@@ -329,11 +335,11 @@ class ContinualPlan(BatchedPlan):
                 ad.shed += 1
                 self.metrics.updates_shed.inc()
             else:
-                self._apply_update(ad)
+                self._apply_update(ad, tenant=fb.tenant, trace_id=tid)
                 applied = True
         merged = False
         if self._applied_since_merge >= self.cc.merge_every:
-            self._merge()
+            self._merge(tenant=fb.tenant, trace_id=tid)
             merged = True
         self._strict_check("learn")
         return {
@@ -380,7 +386,8 @@ class ContinualPlan(BatchedPlan):
         self.metrics.drift.observe(correct, confidence)
         return correct, confidence
 
-    def _apply_update(self, ad: _Adapter) -> None:
+    def _apply_update(self, ad: _Adapter, tenant: Optional[str] = None,
+                      trace_id: Optional[int] = None) -> None:
         """One jitted Hebbian micro-batch step on the tenant's adapter."""
         t0 = time.perf_counter()
         xb = np.stack(ad.buf_x)
@@ -405,7 +412,13 @@ class ContinualPlan(BatchedPlan):
             ad.applied += 1
             self._applied_since_merge += 1
         self.metrics.online_updates.inc()
-        self.metrics.update_s.observe(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.metrics.update_s.observe(t1 - t0)
+        if self.tracer is not None and trace_id is not None:
+            self.tracer.record(
+                trace_id, "plan.update", t0, t1,
+                tenant=tenant, batch=int(xb.shape[0]),
+            )
 
     def _merge_fn(self, n: int) -> Callable:
         """The jitted merge cell for ``n`` contributors (base + adapters):
@@ -437,7 +450,8 @@ class ContinualPlan(BatchedPlan):
             self._merge_cells[n] = fn
         return fn
 
-    def _merge(self) -> None:
+    def _merge(self, tenant: Optional[str] = None,
+               trace_id: Optional[int] = None) -> None:
         """Fold every contributing adapter into the base, snapshot, adopt,
         re-fork.  The merged state is a *candidate* until the drift window
         refills healthily.  A merge landing while an earlier candidate is
@@ -445,6 +459,7 @@ class ContinualPlan(BatchedPlan):
         merges and a rollback reverts all of them — so size
         ``drift_min_samples <= merge_every * update_batch`` when per-merge
         confirmation is wanted."""
+        t0 = time.perf_counter()
         contributors = [
             (name, ad)
             for name, ad in sorted(self._adapters.items())
@@ -488,6 +503,21 @@ class ContinualPlan(BatchedPlan):
                 adapter_layer=self._li,
             )
         self.metrics.merges.inc()
+        if self.tracer is not None:
+            t1 = time.perf_counter()
+            if trace_id is not None:
+                self.tracer.record(
+                    trace_id, "plan.merge", t0, t1,
+                    tenant=tenant, contributors=len(contributors),
+                )
+            self.tracer.emit(
+                MergeApplied(
+                    merges=seq,
+                    strategy=self.cc.merge_strategy,
+                    trace_id=trace_id,
+                    tenant=tenant,
+                )
+            )
         # The post-merge window measures the candidate from scratch; the
         # baseline stays frozen at the last-good window.
         self.metrics.drift.reset_current()
@@ -505,7 +535,8 @@ class ContinualPlan(BatchedPlan):
         if store is not None:
             store.invalidate_above(self._li)
 
-    def _drift_step(self) -> bool:
+    def _drift_step(self, tenant: Optional[str] = None,
+                    trace_id: Optional[int] = None) -> bool:
         """The safety loop: freeze the first baseline, confirm a healthy
         merge candidate, or detect drift and roll a pending merge back.
         Returns True when a rollback happened."""
@@ -518,15 +549,25 @@ class ContinualPlan(BatchedPlan):
             return False
         try:
             self.check_drift()
-        except DriftDetected:
+        except DriftDetected as exc:
             with self._lock:
                 first = not self._drifting
                 self._drifting = True
                 pending = self._pending
             if first:
                 self.metrics.drift_events.inc()
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        DriftDetectedEvent(
+                            accuracy=exc.accuracy,
+                            baseline_accuracy=exc.baseline_accuracy,
+                            samples=exc.samples,
+                            trace_id=trace_id,
+                            tenant=tenant,
+                        )
+                    )
             if pending is not None and self.cc.rollback:
-                self._rollback()
+                self._rollback(tenant=tenant, trace_id=trace_id)
                 return True
             return False
         with self._lock:
@@ -553,7 +594,8 @@ class ContinualPlan(BatchedPlan):
                 threshold=dw.threshold,
             )
 
-    def _rollback(self) -> None:
+    def _rollback(self, tenant: Optional[str] = None,
+                  trace_id: Optional[int] = None) -> None:
         """Restore base + every adapter to the last-good configuration."""
         with self._lock:
             base, adapters, base_weight = self._last_good
@@ -567,6 +609,14 @@ class ContinualPlan(BatchedPlan):
                 ad.buf_x, ad.buf_y = [], []
         self._adopt(base)
         self.metrics.rollbacks.inc()
+        if self.tracer is not None:
+            self.tracer.emit(
+                RollbackApplied(
+                    rollbacks=self.metrics.rollbacks.value,
+                    trace_id=trace_id,
+                    tenant=tenant,
+                )
+            )
         self.metrics.drift.reset_current()
 
     # ------------------------------------------------------------- surfaces

@@ -67,6 +67,8 @@ class _Work:
     future: Future
     t_submit: float
     tag: int
+    trace_id: Optional[int] = None  # set only when a tracer is attached
+    t_open: Optional[float] = None  # batched: when this item's batch opened
 
 
 class AsyncEngine:
@@ -79,11 +81,18 @@ class AsyncEngine:
 
     _POLL_S = 0.05  # idle wakeup so state changes are never missed
 
-    def __init__(self, plan, config, metrics=None, name: str = "engine"):
+    def __init__(self, plan, config, metrics=None, name: str = "engine",
+                 tracer=None):
         self.plan = plan
         self.config = config
         self.name = name  # thread / diagnostics label (router slot name)
         self.metrics = metrics if metrics is not None else plan.metrics
+        # Per-request tracing is opt-in: None (the default, when neither the
+        # supervisor nor the plan carries a Tracer) keeps every span site a
+        # dead `is not None` check — zero allocation, zero lock traffic.
+        self.tracer = tracer if tracer is not None else getattr(
+            plan, "tracer", None
+        )
         self._inbox: Deque[_Work] = deque()
         self._cv = threading.Condition()
         self._state = "new"
@@ -136,11 +145,25 @@ class AsyncEngine:
             self._thread.start()
         return self
 
-    def submit(self, item) -> Future:
+    def submit(self, item, trace_id: Optional[int] = None) -> Future:
         """Queue one work item; the Future resolves to its result (a
         Completion for decode, a score row for batched, scores for
         streaming infer).  Raises :class:`QueueFull` on backpressure and
-        :class:`EngineStopped` once draining has begun."""
+        :class:`EngineStopped` once draining has begun.
+
+        ``trace_id`` correlates this item's spans with an existing trace
+        (the Router passes the id it minted at the fabric front door);
+        when tracing is on and no id is given, one is minted here and —
+        for items that carry a ``trace_id`` attribute (``Request``,
+        ``Feedback``) — written back onto the item so plan-level spans
+        (prefill, per-token decode, learn) join the same trace."""
+        if self.tracer is not None:
+            if trace_id is None:
+                trace_id = getattr(item, "trace_id", None)
+            if trace_id is None:
+                trace_id = self.tracer.new_trace()
+            if hasattr(item, "trace_id") and item.trace_id is None:
+                item.trace_id = trace_id
         with self._cv:
             if self._state in ("draining", "stopped"):
                 self.metrics.rejected.inc()
@@ -156,8 +179,11 @@ class AsyncEngine:
                     f"engine inbox at max_queue={self.config.max_queue}"
                 )
             fut: Future = Future()
+            if trace_id is not None:
+                fut.trace_id = trace_id  # caller-visible correlation handle
             self._inbox.append(
-                _Work(item, fut, time.perf_counter(), self._next_tag)
+                _Work(item, fut, time.perf_counter(), self._next_tag,
+                      trace_id=trace_id)
             )
             self._next_tag += 1
             self.metrics.submitted.inc()
@@ -254,10 +280,21 @@ class AsyncEngine:
         cancelled it while it waited (skip the work, don't serve it)."""
         return work.future.set_running_or_notify_cancel()
 
+    def _span_inbox(self, work: _Work, now: float) -> None:
+        """Submit -> claim dwell in this engine's inbox (one hop of the
+        request's trace); no-op unless both tracer and trace id exist."""
+        if self.tracer is not None and work.trace_id is not None:
+            self.tracer.record(work.trace_id, "engine.inbox",
+                               work.t_submit, now, engine=self.name)
+
     def _complete(self, work: _Work, result) -> None:
         work.future.set_result(result)
         self.metrics.completed.inc()
-        self.metrics.e2e_s.observe(time.perf_counter() - work.t_submit)
+        now = time.perf_counter()
+        self.metrics.e2e_s.observe(now - work.t_submit)
+        if self.tracer is not None and work.trace_id is not None:
+            self.tracer.record(work.trace_id, "engine.e2e",
+                               work.t_submit, now, engine=self.name)
 
     @staticmethod
     def _fail(work: _Work, exc: BaseException) -> None:
@@ -314,6 +351,7 @@ class AsyncEngine:
                     if not self._claim(w):
                         continue  # caller cancelled while queued
                     self.metrics.queue_wait_s.observe(now - w.t_submit)
+                    self._span_inbox(w, now)
                     try:
                         sess.admit(w.item, tag=w.tag)
                         inflight[w.tag] = w
@@ -356,7 +394,8 @@ class AsyncEngine:
                 if not self._inbox and self._state != "running":
                     break
                 batch.append(self._inbox.popleft())
-                deadline = time.perf_counter() + cfg.max_wait_s
+                t_open = time.perf_counter()  # the batch opens HERE
+                deadline = t_open + cfg.max_wait_s
                 while len(batch) < cfg.max_batch:
                     if self._inbox:
                         batch.append(self._inbox.popleft())
@@ -372,13 +411,28 @@ class AsyncEngine:
             now = time.perf_counter()
             for w in batch:
                 self.metrics.queue_wait_s.observe(now - w.t_submit)
+                if self.tracer is not None and w.trace_id is not None:
+                    # Two hops: inbox dwell before the batch opened, then
+                    # the aggregation window (waiting for max_batch /
+                    # max_wait_s) until dispatch.
+                    joined = max(w.t_submit, t_open)
+                    self.tracer.record(w.trace_id, "engine.inbox",
+                                       w.t_submit, joined, engine=self.name)
+                    self.tracer.record(w.trace_id, "engine.batch_agg",
+                                       joined, now, engine=self.name,
+                                       batch=len(batch))
             try:
                 # jaxlint: allow[JL001] reason=request payloads arrive as host objects; staging them is the h2d boundary
                 x = np.stack([np.asarray(w.item) for w in batch])
                 scores = np.asarray(self.plan.predict(x))  # jaxlint: allow[JL001] reason=completion futures hand results back as host arrays
                 with self._cv:
                     self.batches += 1
+                t_done = time.perf_counter()
                 for i, w in enumerate(batch):
+                    if self.tracer is not None and w.trace_id is not None:
+                        self.tracer.record(w.trace_id, "engine.batch",
+                                           now, t_done, engine=self.name,
+                                           batch=len(batch))
                     self._complete(w, scores[i])
             except Exception as e:  # noqa: BLE001 — fail the whole batch
                 for w in batch:
@@ -411,7 +465,9 @@ class AsyncEngine:
                 self.metrics.queue_depth.set(len(self._inbox))
             if not self._claim(w):
                 continue  # caller cancelled while queued
-            self.metrics.queue_wait_s.observe(time.perf_counter() - w.t_submit)
+            now = time.perf_counter()
+            self.metrics.queue_wait_s.observe(now - w.t_submit)
+            self._span_inbox(w, now)
             try:
                 # jaxlint: allow[JL001] reason=per-item host payload staged once at the h2d boundary
                 self._complete(w, self.plan.infer(np.asarray(w.item)))
@@ -449,10 +505,20 @@ class AsyncEngine:
                 self.metrics.queue_depth.set(len(self._inbox))
             if not self._claim(w):
                 continue  # caller cancelled while queued
-            self.metrics.queue_wait_s.observe(time.perf_counter() - w.t_submit)
+            now = time.perf_counter()
+            self.metrics.queue_wait_s.observe(now - w.t_submit)
+            self._span_inbox(w, now)
             try:
                 if isinstance(w.item, Feedback):
-                    self._complete(w, self.plan.learn(w.item))
+                    t0 = time.perf_counter()
+                    ack = self.plan.learn(w.item)
+                    if self.tracer is not None and w.trace_id is not None:
+                        self.tracer.record(
+                            w.trace_id, "engine.learn", t0,
+                            time.perf_counter(), engine=self.name,
+                            tenant=getattr(w.item, "tenant", None),
+                        )
+                    self._complete(w, ack)
                 else:
                     # jaxlint: allow[JL001] reason=per-item host payload staged once at the h2d boundary
                     self._complete(w, self.plan.infer(np.asarray(w.item)))

@@ -105,6 +105,12 @@ class Histogram:
         self._lock = lock if lock is not None else threading.Lock()
         self._ring = np.empty(window, np.float64)
         self._window = window
+        # Ring bookkeeping is decoupled from the lifetime count: merge()
+        # folds another histogram's window in without claiming its whole
+        # lifetime happened here, so `filled slots` cannot be derived from
+        # `_n` alone.
+        self._pos = 0  # next write slot
+        self._len = 0  # filled slots (<= window)
         self._n = 0  # lifetime observation count
         self._sum = 0.0
         self._max = 0.0
@@ -112,14 +118,63 @@ class Histogram:
     def observe(self, v: float) -> None:
         v = float(v)
         with self._lock:
-            self._ring[self._n % self._window] = v
+            self._ring[self._pos] = v
+            self._pos = (self._pos + 1) % self._window
+            if self._len < self._window:
+                self._len += 1
             self._n += 1
             self._sum += v
             if v > self._max:
                 self._max = v
 
     def _window_values(self) -> np.ndarray:
-        return self._ring[: min(self._n, self._window)].copy()
+        return self._ring[: self._len].copy()
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other``'s retained window and lifetime totals into this
+        histogram (RouterMetrics uses this to expose fabric-wide latency
+        quantiles across per-engine bundles).
+
+        Both locks are taken, ordered by ``id()`` so two threads merging
+        opposite directions cannot deadlock; instruments sharing one
+        bundle lock (re-entrant) acquire it once.  When the combined
+        windows exceed this histogram's capacity the most recent slice
+        (``other``'s window is treated as newer) is kept — size the
+        destination window to the sum of the sources for exact
+        concatenated-window percentiles.
+        """
+        if other is self:
+            raise ValueError("cannot merge a Histogram into itself")
+        if self._lock is other._lock:
+            with self._lock:
+                self._merge_from_locked(other)
+            return self
+        first, second = (
+            (self, other) if id(self._lock) < id(other._lock)
+            else (other, self)
+        )
+        with first._lock:
+            with second._lock:
+                self._merge_from_locked(other)
+        return self
+
+    def _merge_from_locked(self, other: "Histogram") -> None:
+        # Caller holds both locks.  Oldest-first order within each source
+        # window, self's (older) values ahead of other's.
+        mine = np.concatenate(
+            (self._ring[self._pos: self._len], self._ring[: self._pos])
+        ) if self._len == self._window else self._ring[: self._len]
+        theirs = np.concatenate(
+            (other._ring[other._pos: other._len], other._ring[: other._pos])
+        ) if other._len == other._window else other._ring[: other._len]
+        combined = np.concatenate((mine, theirs))[-self._window:]
+        self._ring[: combined.size] = combined
+        self._len = int(combined.size)
+        self._pos = self._len % self._window
+        self._n += other._n
+        self._sum += other._sum
+        if other._max > self._max:
+            self._max = other._max
 
     @property
     def count(self) -> int:
@@ -460,6 +515,24 @@ class RouterMetrics:
         with self._lock:
             return dict(self._engines)
 
+    def fleet_histograms(self) -> Dict[str, Histogram]:
+        """Fabric-wide latency quantiles: per-engine windows merged into
+        fresh histograms sized to hold every engine's full window, so the
+        merged percentiles equal ``np.percentile`` over the concatenated
+        windows (no truncation)."""
+        with self._lock:
+            engines = list(self._engines.values())
+        out: Dict[str, Histogram] = {}
+        for name in ServiceMetrics.HISTOGRAMS:
+            capacity = max(
+                1, sum(sm.hist(name)._window for sm in engines)
+            )
+            merged = Histogram(window=capacity)
+            for sm in engines:
+                merged.merge(sm.hist(name))
+            out[name] = merged
+        return out
+
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             out: Dict[str, Any] = {
@@ -473,19 +546,31 @@ class RouterMetrics:
         # Engine bundles own separate locks: snapshot each consistently
         # OUTSIDE the router-metrics lock (no nested foreign acquisition).
         out["engines"] = {name: sm.snapshot() for name, sm in engines.items()}
+        # The fabric-wide roll-up (merged per-engine windows).  Engines keep
+        # recording between the per-engine snapshots above and this merge;
+        # the roll-up is its own consistent view, not a re-sum of theirs.
+        out["fleet"] = {
+            name: h.snapshot() for name, h in self.fleet_histograms().items()
+        }
         return out
 
 
 def format_latency_line(snapshot: Dict[str, Any], *names: str) -> str:
     """One CLI-friendly line: ``queue_wait p50=1.2ms p95=3.4ms p99=5.6ms``
-    per requested histogram (skipping empty ones).  When the snapshot
-    carries online-learning activity (any continual-tier counter nonzero),
-    a trailing ``online updates=.. merges=.. rollbacks=.. drift=..`` segment
-    is appended; frozen-serving snapshots render exactly as before."""
+    per requested histogram.  Explicitly requested names render
+    **shape-stably** — a zero-observation histogram shows ``p50=0.00ms ...``
+    instead of vanishing, so fleet roll-ups that print one line per engine
+    stay column-aligned even for a just-restarted engine that has not
+    dispatched yet.  The no-names form (render "whatever has data") keeps
+    skipping empties.  When the snapshot carries online-learning activity
+    (any continual-tier counter nonzero), a trailing ``online updates=..
+    merges=.. rollbacks=.. drift=..`` segment is appended; frozen-serving
+    snapshots render exactly as before."""
+    explicit = bool(names)
     parts = []
     for name in names or ServiceMetrics.HISTOGRAMS:
         h = snapshot.get(name)
-        if not h or not h.get("count"):
+        if h is None or (not explicit and not h.get("count")):
             continue
         label = name[:-2] if name.endswith("_s") else name
         parts.append(

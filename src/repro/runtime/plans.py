@@ -86,6 +86,17 @@ class ExecutionPlan:
         last = self.layers[-1] if self.layers else None
         return last if isinstance(last, self._dense_cls) else None
 
+    # --------------------------------------------------------- observability
+    def jit_cache_sizes(self) -> dict:
+        """``name -> trace-cache size`` for every compiled callable this
+        plan registered — the observability view of the compile-once
+        contract (the strict sentinel asserts over the same registry)."""
+        return {
+            name: fn._cache_size()
+            for name, fn in self.jitted.items()
+            if hasattr(fn, "_cache_size")
+        }
+
     # ----------------------------------------------------------- decoration
     def bind_trainer(self, trainer) -> "ExecutionPlan":
         """Called by DataParallelTrainer.decorate; must precede compilation

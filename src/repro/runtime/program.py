@@ -186,12 +186,28 @@ def run_program(
     return ProgramResult(sgd_params, sgd_ran, bcpnn_trained)
 
 
-def _timed(history: List[dict], entry: dict, t0: float, result) -> None:
-    """Record one history entry with its blocked wall-time."""
+def _timed(history: List[dict], entry: dict, t0: float, result, net=None) -> None:
+    """Record one history entry with its wall-time split into the host-side
+    dispatch span (``host_s``: t0 to the fence) and the device wait at the
+    phase-boundary fence (``device_wait_s``); ``seconds`` stays the total.
+    When the network carries a tracer, the entry is also recorded as a
+    ``train.<phase>`` span on the shared training trace."""
+    t1 = time.perf_counter()
     # jaxlint: allow[JL001] reason=phase timing telemetry must block once at the phase boundary
     jax.block_until_ready(result)
-    entry["seconds"] = time.perf_counter() - t0
+    t2 = time.perf_counter()
+    entry["host_s"] = t1 - t0
+    entry["device_wait_s"] = t2 - t1
+    entry["seconds"] = t2 - t0
     history.append(entry)
+    tracer = getattr(net, "tracer", None)
+    if tracer is not None:
+        attrs = {
+            k: v for k, v in entry.items() if k not in ("phase", "seconds")
+        }
+        tracer.record(
+            tracer.TRAIN_TRACE_ID, f"train.{entry['phase']}", t0, t2, **attrs
+        )
 
 
 def check_finite(net, tree, where: str) -> None:
@@ -220,7 +236,7 @@ def _phase_input(net, level: int, states, x, batch_size, history):
     t0 = time.perf_counter()
     xk = store.level(level, states, x, chunk=batch_size)
     if level > 0:
-        _timed(history, {"phase": "project", "level": level}, t0, xk)
+        _timed(history, {"phase": "project", "level": level}, t0, xk, net=net)
     return xk
 
 
@@ -244,7 +260,10 @@ def _run_hidden_phase(
         idx = net._epoch_indices(n, n_total, shuffle)
         state = step(state, idx)
         _check_finite(net, state, f"hidden layer {li}, epoch {epoch}")
-        _timed(history, {"phase": f"hidden{li}", "epoch": epoch}, t0, state)
+        _timed(
+            history, {"phase": f"hidden{li}", "epoch": epoch}, t0, state,
+            net=net,
+        )
         if verbose:
             print(
                 f"[fit/{net.plan.name}] hidden layer {li} epoch "
@@ -281,7 +300,7 @@ def _run_bcpnn_phase(
         idx = net._epoch_indices(n, n_total, shuffle)
         state = step(state, idx)
         _check_finite(net, state, f"bcpnn readout epoch {epoch}")
-        _timed(history, {"phase": "readout", "epoch": epoch}, t0, state)
+        _timed(history, {"phase": "readout", "epoch": epoch}, t0, state, net=net)
         if verbose:
             print(
                 f"[fit/{net.plan.name}] readout epoch {epoch + 1}/{phase.epochs}"
@@ -310,7 +329,10 @@ def _run_sgd_phase(
         idx = net._epoch_indices(n, n_total, shuffle)
         params, opt_state, loss = step(params, opt_state, idx)
         _check_finite(net, params, f"sgd readout epoch {epoch}")
-        _timed(history, {"phase": "sgd_readout", "epoch": epoch}, t0, params)
+        _timed(
+            history, {"phase": "sgd_readout", "epoch": epoch}, t0, params,
+            net=net,
+        )
         if verbose:
             print(
                 f"[fit/{net.plan.name}] sgd readout epoch "

@@ -75,6 +75,12 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro.runtime.engine import AsyncEngine, EngineStopped, QueueFull
 from repro.runtime.metrics import RouterMetrics
+from repro.runtime.trace import (
+    DeadlineShed,
+    EngineRestart,
+    TenantShed,
+    build_tracer,
+)
 
 __all__ = [
     "RouterError",
@@ -198,6 +204,14 @@ class RouterConfig:
                     ``DriftDetected`` instead of dispatched — callers see
                     a typed refusal while the plan's safety loop rolls
                     back, never silent answers from a degraded model.
+    trace:          optional :class:`~repro.runtime.trace.TraceConfig`.
+                    When set, the Router owns ONE Tracer for the whole
+                    fabric: it mints trace ids at the front door, records
+                    router.sched / router.e2e spans, journals restart and
+                    shed events, and hands the tracer to every engine and
+                    plan it builds.  None (default) keeps every span site
+                    a dead ``is not None`` check — zero allocation, zero
+                    lock traffic.
     """
 
     tenants: Mapping[str, TenantConfig] = dataclasses.field(
@@ -212,8 +226,16 @@ class RouterConfig:
     spill_patience_s: float = 0.02
     poll_s: float = 0.02
     shed_on_drift: bool = True
+    trace: Optional[Any] = None
 
     def __post_init__(self):
+        if self.trace is not None:
+            from repro.runtime.trace import TraceConfig
+
+            if not isinstance(self.trace, TraceConfig):
+                raise TypeError(
+                    f"trace must be a TraceConfig, got {type(self.trace).__name__}"
+                )
         if self.routing not in ROUTING_POLICIES:
             raise ValueError(
                 f"Unknown routing {self.routing!r} "
@@ -253,6 +275,7 @@ class _RouterWork:
     seq: int
     retries: int = 0
     claimed: bool = False  # set_running_or_notify_cancel already done
+    trace_id: Optional[int] = None  # fabric trace id (None = tracing off)
 
     def key(self) -> Tuple[float, float, int]:
         """EDF-within-priority heap key: higher priority first, then
@@ -314,6 +337,9 @@ class Router:
     def __init__(self, config: Optional[RouterConfig] = None):
         self.config = config if config is not None else RouterConfig()
         self.metrics = RouterMetrics()
+        # ONE tracer per fabric (None unless config.trace enables it); the
+        # Router mints trace ids and every engine/plan it builds shares it.
+        self.tracer = build_tracer(self.config.trace)
         self._cv = threading.Condition()
         self._state = "new"
         self._thread: Optional[threading.Thread] = None
@@ -349,7 +375,11 @@ class Router:
             config = ServiceConfig()
         metrics = self.metrics.register_engine(name)
         plan = factory(config, metrics)
-        engine = AsyncEngine(plan, config, metrics=metrics, name=name)
+        if self.tracer is not None and hasattr(plan, "bind_tracer"):
+            plan.bind_tracer(self.tracer)
+        engine = AsyncEngine(
+            plan, config, metrics=metrics, name=name, tracer=self.tracer
+        )
         with self._cv:
             if self._state in ("draining", "stopped"):
                 raise RouterStopped(
@@ -456,6 +486,16 @@ class Router:
         now = time.perf_counter()
         fut: Future = Future()
         tm = self.metrics.tenant(tenant)
+        trace_id: Optional[int] = None
+        if self.tracer is not None:
+            # Front door mints the fabric trace id (or adopts one already
+            # stamped on the item) so EVERY downstream hop correlates.
+            trace_id = getattr(item, "trace_id", None)
+            if trace_id is None:
+                trace_id = self.tracer.new_trace()
+                if hasattr(item, "trace_id"):
+                    item.trace_id = trace_id
+            fut.trace_id = trace_id
         with self._cv:
             if self._state in ("draining", "stopped"):
                 raise RouterStopped(
@@ -479,6 +519,15 @@ class Router:
                 and t.depth >= t.cfg.max_queue
             ):
                 tm.shed_queue_full.inc()
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        TenantShed(
+                            depth=t.depth,
+                            reason="queue_full",
+                            trace_id=trace_id,
+                            tenant=tenant,
+                        )
+                    )
                 raise TenantQueueFull(tenant, t.depth, t.cfg.max_queue)
             work = _RouterWork(
                 item=item,
@@ -490,6 +539,7 @@ class Router:
                 deadline_s=deadline_s,
                 t_submit=now,
                 seq=self._seq,
+                trace_id=trace_id,
             )
             self._seq += 1
             tm.submitted.inc()
@@ -504,6 +554,12 @@ class Router:
             # Dead on arrival: shed with the causal exception, outside the
             # lock (future callbacks may re-enter submit()).
             tm.shed_deadline.inc()
+            if self.tracer is not None:
+                self.tracer.emit(
+                    DeadlineShed(
+                        waited_s=0.0, trace_id=trace_id, tenant=tenant
+                    )
+                )
             fut.set_exception(
                 DeadlineExceeded(tenant, deadline_s, 0.0)
             )
@@ -605,10 +661,24 @@ class Router:
                 slot.restarts += 1
             self.metrics.restarts.inc()
             plan = slot.factory(slot.config, slot.metrics)
+            if self.tracer is not None and hasattr(plan, "bind_tracer"):
+                plan.bind_tracer(self.tracer)
             replacement = AsyncEngine(
-                plan, slot.config, metrics=slot.metrics, name=slot.name
+                plan,
+                slot.config,
+                metrics=slot.metrics,
+                name=slot.name,
+                tracer=self.tracer,
             )
             replacement.start()
+            if self.tracer is not None:
+                self.tracer.emit(
+                    EngineRestart(
+                        engine=slot.name,
+                        restarts=slot.restarts,
+                        leftover=len(leftover),
+                    )
+                )
             with self._cv:
                 slot.engine = replacement
                 slot.last_leftover = len(leftover)
@@ -632,8 +702,24 @@ class Router:
             tm = self.metrics.tenant(w.tenant)
             if isinstance(exc, DeadlineExceeded):
                 tm.shed_deadline.inc()
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        DeadlineShed(
+                            waited_s=exc.waited_s,
+                            trace_id=w.trace_id,
+                            tenant=w.tenant,
+                        )
+                    )
             elif _is_drift(exc):
                 tm.shed_drift.inc()
+                if self.tracer is not None:
+                    self.tracer.emit(
+                        TenantShed(
+                            reason="drift",
+                            trace_id=w.trace_id,
+                            tenant=w.tenant,
+                        )
+                    )
             else:
                 tm.failed.inc()
             self._fail_future(w, exc)
@@ -649,7 +735,9 @@ class Router:
                 return progressed
             work.claimed = True
         try:
-            engine_future = slot.engine.submit(work.item)
+            engine_future = slot.engine.submit(
+                work.item, trace_id=work.trace_id
+            )
         except (QueueFull, EngineStopped):
             # Lost a race with a crash (or a foreign submitter filled the
             # inbox): put the work back; the health check rebuilds the
@@ -659,7 +747,20 @@ class Router:
                 self._requeue_locked(work)
             return progressed
         tm = self.metrics.tenant(work.tenant)
-        tm.sched_wait_s.observe(time.perf_counter() - work.t_submit)
+        t_disp = time.perf_counter()
+        tm.sched_wait_s.observe(t_disp - work.t_submit)
+        if self.tracer is not None and work.trace_id is not None:
+            # "target" (not "engine") keeps this span on the router's
+            # chrome-trace track while still naming the chosen engine.
+            self.tracer.record(
+                work.trace_id,
+                "router.sched",
+                work.t_submit,
+                t_disp,
+                tenant=work.tenant,
+                pool=work.pool,
+                target=slot.name,
+            )
         self.metrics.dispatched.inc()
         engine_future.add_done_callback(
             lambda f, w=work, s=slot: self._on_engine_done(w, s, f)
@@ -920,7 +1021,17 @@ class Router:
             return
         if exc is None:
             tm.completed.inc()
-            tm.e2e_s.observe(time.perf_counter() - work.t_submit)
+            t_done = time.perf_counter()
+            tm.e2e_s.observe(t_done - work.t_submit)
+            if self.tracer is not None and work.trace_id is not None:
+                self.tracer.record(
+                    work.trace_id,
+                    "router.e2e",
+                    work.t_submit,
+                    t_done,
+                    tenant=work.tenant,
+                    pool=work.pool,
+                )
             work.future.set_result(engine_future.result())
         else:
             tm.failed.inc()

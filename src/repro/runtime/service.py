@@ -95,6 +95,10 @@ class Request:
     prompt: np.ndarray  # (len,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    # Trace correlation: minted by the fabric front door (Router/engine)
+    # when tracing is on, so plan-level spans (prefill, per-token decode)
+    # join the same trace as the scheduling hops.  None when tracing is off.
+    trace_id: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -177,6 +181,13 @@ class ServiceConfig:
                 unchanged; labeled ``Feedback`` items drive jitted Hebbian
                 adapter updates, merges, drift detection and rollback).
                 None = frozen serving, bit-identical to before.
+    trace:      a ``repro.runtime.trace.TraceConfig`` enabling per-request
+                tracing + the structured event journal: every hop (queue
+                wait, inbox, prefill, per-token decode, learn) records a
+                span keyed by the request's ``trace_id``, exportable as
+                Chrome trace JSON.  None (the default) constructs no
+                tracer at all — zero allocation, zero lock traffic,
+                bit-identical results.
     """
 
     max_batch: int = 4
@@ -192,6 +203,7 @@ class ServiceConfig:
     strict: bool = False
     router: Optional[Any] = None
     continual: Optional[Any] = None
+    trace: Optional[Any] = None
 
     def __post_init__(self):
         if self.continual is not None or self.plan == "continual":
@@ -250,6 +262,14 @@ class ServiceConfig:
                     f"router must be a RouterConfig, got "
                     f"{type(self.router).__name__}"
                 )
+        if self.trace is not None:
+            from repro.runtime.trace import TraceConfig
+
+            if not isinstance(self.trace, TraceConfig):
+                raise ValueError(
+                    f"trace must be a TraceConfig, got "
+                    f"{type(self.trace).__name__}"
+                )
 
     def bucket_for(self, n: int) -> int:
         """Smallest configured bucket >= n, or n itself when none fits."""
@@ -280,6 +300,23 @@ class ServePlan:
         # Strict-mode recompile sentinel over this plan's jitted callables
         # (repro.analysis.strict); None unless ``config.strict``.
         self._sentinel = RecompileSentinel() if config.strict else None
+        # Per-request tracer (repro.runtime.trace), attached by the fabric
+        # owner via bind_tracer(); None keeps every span site a dead check.
+        self.tracer = None
+
+    def bind_tracer(self, tracer) -> None:
+        """Attach the fabric's Tracer so plan-level spans (prefill,
+        per-token decode, learn/merge) join request traces; also hooks the
+        strict-mode sentinel's rebaseline into the event journal."""
+        with self._lock:
+            self.tracer = tracer
+        if self._sentinel is not None and tracer is not None:
+            def _journal_rebaseline(sizes, _t=tracer):
+                from repro.runtime.trace import RecompileRebaseline
+
+                _t.emit(RecompileRebaseline(sizes=dict(sizes)))
+
+            self._sentinel.on_rebaseline = _journal_rebaseline
 
     def _strict_registry(self) -> Dict[str, Any]:
         """name -> jitted callable, re-collected at every check (registries
@@ -489,10 +526,18 @@ class DecodeSession:
         if slot is None:
             return False
         plan = self.plan
+        t0 = time.perf_counter()
         first, cache_one = plan._prefill_one(req.prompt)
         self.caches = plan._write(
             self.caches, cache_one, jnp.asarray(slot, jnp.int32)
         )
+        if plan.tracer is not None:
+            tid = getattr(req, "trace_id", None)
+            if tid is not None:
+                plan.tracer.record(
+                    tid, "plan.prefill", t0, time.perf_counter(),
+                    slot=slot, prompt_len=len(req.prompt),
+                )
         self.active[slot] = {
             "req": req,
             "cur_len": len(req.prompt),
@@ -564,7 +609,19 @@ class DecodeSession:
             )
         # jaxlint: allow[JL001] reason=greedy tokens steer EOS/admission host-side; ONE d2h per fused step by design
         nxt = np.asarray(nxt)
-        plan.metrics.decode_step_s.observe(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        plan.metrics.decode_step_s.observe(t1 - t0)
+        if plan.tracer is not None:
+            # One span per advancing request per token (inter-token
+            # latency, trace-correlated); the fused dispatch is shared, so
+            # concurrent slots show identical span bounds — by design.
+            for slot in advancing:
+                tid = getattr(self.active[slot]["req"], "trace_id", None)
+                if tid is not None:
+                    plan.tracer.record(
+                        tid, "plan.decode_step", t0, t1, slot=slot,
+                        token=self.active[slot]["steps"],
+                    )
         for slot in advancing:
             st = self.active[slot]
             st["tokens"].append(int(nxt[slot]))
@@ -813,6 +870,14 @@ class InferenceService:
         self.plan = plan
         self.config = config
         self.metrics = plan.metrics
+        # Single-engine tracing: the service owns the Tracer (fleet serving
+        # puts it on the Router instead) and binds it to the plan so
+        # prefill / per-token spans join the engine's inbox spans.
+        from repro.runtime.trace import build_tracer
+
+        self.tracer = build_tracer(config.trace)
+        if self.tracer is not None:
+            plan.bind_tracer(self.tracer)
         self.engine = None  # set by start()
         self._queue: Deque = deque()
         self._queue_t: Deque[float] = deque()
@@ -841,7 +906,7 @@ class InferenceService:
             if run:
                 self.engine.start()
             return self.engine
-        self.engine = AsyncEngine(self.plan, self.config)
+        self.engine = AsyncEngine(self.plan, self.config, tracer=self.tracer)
         if run:
             self.engine.start()
         return self.engine
@@ -1019,6 +1084,11 @@ def serve_fleet(model, params, config: Optional[ServiceConfig] = None,
     router_config = config.router
     if router_config is None:
         router_config = RouterConfig()
+    if router_config.trace is None and config.trace is not None:
+        # The fleet shares ONE tracer, owned by the Router: promote the
+        # service-level trace config so engine/plan spans correlate with
+        # the router's sched-wait spans under one trace_id space.
+        router_config = dataclasses.replace(router_config, trace=config.trace)
     if config.max_queue is None:
         engine_config = dataclasses.replace(
             config, max_queue=config.max_batch, router=None

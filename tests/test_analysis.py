@@ -423,6 +423,24 @@ class TestDogfood:
         findings = lint_source(src, rel)
         assert findings == [], [str(f) for f in findings]
 
+    @pytest.mark.parametrize(
+        "rel", ["repro/runtime/trace.py", "repro/runtime/export.py"]
+    )
+    def test_observability_modules_are_hot_and_clean(self, rel):
+        """The tracing invariant: the span ring and the metrics exporter
+        sit between jitted dispatches, so both are whole-file JL001 hot
+        modules — and both lint clean with ZERO waivers (they are pure
+        stdlib; no jax/numpy value ever reaches them)."""
+        from repro.analysis.lint import DEFAULT_HOT_MODULES
+
+        assert rel in DEFAULT_HOT_MODULES
+        with open(os.path.join(REPO, "src", rel)) as f:
+            src = f.read()
+        assert "import numpy" not in src and "import jax" not in src
+        assert "jaxlint: allow" not in src  # clean without waivers
+        findings = lint_source(src, rel)
+        assert findings == [], [str(f) for f in findings]
+
 
 # ---------------------------------------------------------------- fixtures
 @pytest.fixture(scope="module")
